@@ -1,0 +1,86 @@
+"""Shared benchmark plumbing: hub scorers, cached hypertuning results."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.dataset import load_hub, train_test_caches  # noqa: E402
+from repro.core.hypertuner import (HyperConfigResult,  # noqa: E402
+                                   HyperTuningResult, exhaustive_hypertune,
+                                   score_hyperconfig)
+from repro.core.methodology import AggregateReport, make_scorer  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "hypertune")
+FAST = os.environ.get("REPRO_FAST", "0") == "1"
+REPEATS = 5 if FAST else 25
+PAPER_SET = ("dual_annealing", "genetic_algorithm", "pso",
+             "simulated_annealing")
+
+_scorer_cache: dict = {}
+
+
+def train_scorers():
+    if "train" not in _scorer_cache:
+        train, test = train_test_caches()
+        _scorer_cache["train"] = [make_scorer(c) for c in train]
+        _scorer_cache["test"] = [make_scorer(c) for c in test]
+    return _scorer_cache["train"]
+
+
+def test_scorers():
+    train_scorers()
+    return _scorer_cache["test"]
+
+
+def _result_path(strategy: str) -> str:
+    return os.path.join(RESULTS_DIR, f"exhaustive_{strategy}"
+                        f"{'_fast' if FAST else ''}.json")
+
+
+def exhaustive_results(strategy: str, progress=None) -> HyperTuningResult:
+    """Exhaustive hypertuning on the train split, cached to disk (this is
+    the expensive step shared by Figs. 2/3/5/6)."""
+    path = _result_path(strategy)
+    if os.path.exists(path):
+        with open(path) as f:
+            d = json.load(f)
+        results = {}
+        for hp_id, rec in d["results"].items():
+            rep = AggregateReport(
+                score=rec["score"], curve=np.array(rec["curve"]),
+                per_space={k: np.array(v)
+                           for k, v in rec["per_space"].items()},
+                per_space_score=rec["per_space_score"],
+                simulated_seconds=rec["simulated_seconds"])
+            results[hp_id] = HyperConfigResult(rec["hyperparams"], rep)
+        return HyperTuningResult(strategy, results, d["wall_seconds"],
+                                 d["simulated_seconds"])
+    res = exhaustive_hypertune(strategy, train_scorers(), repeats=REPEATS,
+                               seed=0, progress=progress)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    payload = {
+        "strategy": strategy,
+        "wall_seconds": res.wall_seconds,
+        "simulated_seconds": res.simulated_seconds,
+        "repeats": REPEATS,
+        "results": {
+            hp_id: {
+                "hyperparams": r.hyperparams,
+                "score": r.score,
+                "curve": r.report.curve.tolist(),
+                "per_space": {k: v.tolist()
+                              for k, v in r.report.per_space.items()},
+                "per_space_score": r.report.per_space_score,
+                "simulated_seconds": r.report.simulated_seconds,
+            } for hp_id, r in res.results.items()
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return res

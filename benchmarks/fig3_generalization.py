@@ -1,0 +1,34 @@
+"""Fig. 3 analogue: best/worst hyperparameter configs evaluated on
+(a) the tuning run, (b) the train spaces re-executed with a fresh seed and
+more repeats, (c) the held-out test spaces (3 unseen device models).
+
+The paper's claim: scores are stable on re-execution and the best config
+generalizes to spaces never tuned on."""
+from __future__ import annotations
+
+from repro.core.hypertuner import score_hyperconfig
+
+from .common import PAPER_SET, REPEATS, exhaustive_results, test_scorers, \
+    train_scorers
+
+
+def main() -> None:
+    print(f"{'algorithm':22s} {'which':6s} {'tuning':>8s} {'train-re':>9s} "
+          f"{'test':>8s}")
+    gen_gaps = []
+    for name in PAPER_SET:
+        res = exhaustive_results(name)
+        for which, cfgres in (("best", res.best), ("worst", res.worst)):
+            re_train = score_hyperconfig(name, cfgres.hyperparams,
+                                         train_scorers(),
+                                         repeats=REPEATS, seed=1234)
+            re_test = score_hyperconfig(name, cfgres.hyperparams,
+                                        test_scorers(),
+                                        repeats=REPEATS, seed=1234)
+            print(f"{name:22s} {which:6s} {cfgres.score:8.3f} "
+                  f"{re_train.score:9.3f} {re_test.score:8.3f}")
+            if which == "best":
+                gen_gaps.append(re_test.score - cfgres.score)
+    print(f"\nmean (test - tuning) gap for best configs: "
+          f"{sum(gen_gaps)/len(gen_gaps):+.3f} "
+          f"(≈0 ⇒ excellent generalization, paper Fig. 3)")

@@ -1,0 +1,57 @@
+"""§Roofline table: per (arch × shape × mesh) terms from the dry-run
+artifacts (experiments/dryrun/*.json). Single-pod rows form the baseline
+table; the multi-pod pass proves the pod axis shards."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(mesh: str | None = "single"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh is None or r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def main() -> None:
+    recs = load_records("single")
+    if not recs:
+        print("no dry-run artifacts; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    print(f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'dominant':>10s} {'useful':>7s} "
+          f"{'peakGiB':>8s}")
+    n_ok = n_skip = 0
+    for r in recs:
+        if r["status"] == "skipped":
+            n_skip += 1
+            print(f"{r['arch']:22s} {r['shape']:12s} "
+                  f"{'—— skipped: ' + r['reason']}")
+            continue
+        if r["status"] != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} ERROR {r['error'][:60]}")
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        peak = r["memory"]["peak_bytes_per_chip"] / 2**30
+        print(f"{r['arch']:22s} {r['shape']:12s} {rl['compute_s']:10.4f} "
+              f"{rl['memory_s']:10.4f} {rl['collective_s']:10.4f} "
+              f"{rl['dominant']:>10s} {rl['useful_ratio']:7.3f} {peak:8.2f}")
+    # multi-pod proof
+    multi = [r for r in load_records("multi") if r["status"] == "ok"]
+    print(f"\nsingle-pod: {n_ok} ok, {n_skip} skipped; "
+          f"multi-pod (2×16×16): {len(multi)} cells compile OK")
+    # bottleneck census
+    from collections import Counter
+    doms = Counter(r["roofline"]["dominant"] for r in recs
+                   if r["status"] == "ok")
+    print(f"dominant-term census (single-pod): {dict(doms)}")

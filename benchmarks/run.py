@@ -1,0 +1,47 @@
+"""Benchmark driver — one function per paper table/figure.
+
+  table2    simulated brute-force cost of the benchmark hub (paper Table II)
+  fig2      hyperparameter score distributions per algorithm (violin data)
+  fig3      best/worst generalization: tuning vs train re-run vs test split
+  fig5      optimal vs average configuration, aggregate curves + improvement
+            (the paper's 94.8 % claim)
+  fig6      meta-strategies on the hyperparameter spaces (paper Fig. 6)
+  fig8      extended (non-exhaustive) tuning with a meta-strategy
+            (the paper's 204.7 % claim)
+  fig9      live-vs-simulation cost (the ~130× speedup claim)
+  roofline  per-cell roofline table from the dry-run artifacts
+
+Usage: PYTHONPATH=src python -m benchmarks.run [names...]
+Set REPRO_FAST=1 for a reduced-repeats smoke pass.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (fig2_violins, fig3_generalization, fig5_curves, fig6_meta,
+               fig8_extended, fig9_speedup, roofline_table, table2_hub)
+
+ALL = {
+    "table2": table2_hub.main,
+    "fig2": fig2_violins.main,
+    "fig3": fig3_generalization.main,
+    "fig5": fig5_curves.main,
+    "fig6": fig6_meta.main,
+    "fig8": fig8_extended.main,
+    "fig9": fig9_speedup.main,
+    "roofline": roofline_table.main,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    for name in names:
+        t0 = time.perf_counter()
+        print(f"\n================ {name} ================", flush=True)
+        ALL[name]()
+        print(f"[{name} done in {time.perf_counter() - t0:.1f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table II analogue: brute-force cost per search space (simulated hours)
+plus the actual wall time of building the hub through the cost model."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import load_hub
+
+
+def main() -> None:
+    hub = load_hub()
+    root = os.path.join(os.path.dirname(__file__), "..", "hub")
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    hours = manifest["bruteforce_hours"]
+    devices = sorted({d for k in hours.values() for d in k})
+    print(f"{'Application':14s} " + " ".join(f"{d:>10s}" for d in devices))
+    for kernel, per_dev in sorted(hours.items()):
+        row = " ".join(f"{per_dev[d]:10.2f}" for d in devices)
+        print(f"{kernel:14s} {row}")
+    total = sum(sum(v.values()) for v in hours.values())
+    print(f"\ntotal simulated brute-force: {total:.1f} h "
+          f"(paper: 962 h on real GPUs)")
+    print(f"hub build wall time: {manifest['build_wall_seconds']:.1f} s")
+    for key, entry in sorted(manifest["files"].items()):
+        print(f"  {key:28s} configs={entry['n_configs']:6d} "
+              f"ok={entry['n_ok']:6d} sha256={entry['sha256'][:12]}")

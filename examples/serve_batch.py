@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + decode for mixed requests.
+
+Run: PYTHONPATH=src python examples/serve_batch.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+for arch in ("gemma3-1b", "zamba2-1.2b"):
+    print(f"==== {arch} (reduced config) ====")
+    serve_main(["--arch", arch, "--preset", "tiny", "--batch", "4",
+                "--prompt-len", "12", "--new-tokens", "12"])

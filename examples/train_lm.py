@@ -1,0 +1,21 @@
+"""End-to-end training driver: train a reduced LM for a few hundred steps
+with checkpointing, kill/resume, and loss reporting.
+
+Run: PYTHONPATH=src python examples/train_lm.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+common = ["--arch", "mamba2-130m", "--preset", "tiny", "--global-batch", "8",
+          "--seq-len", "64", "--ckpt-dir", ckpt, "--save-every", "60",
+          "--log-every", "20", "--lr", "3e-3"]
+print("== phase 1: train 120 steps ==")
+train_main(common + ["--steps", "120"])
+print("\n== phase 2: 'crash' and resume to 200 steps ==")
+train_main(common + ["--steps", "200"])

@@ -1,0 +1,141 @@
+"""T4-style results cache: the on-disk form of a brute-forced search space.
+
+The paper stores hub results in the community T4 JSON format (FAIR sharing of
+data in autotuning research [42]); files are compressed for portability
+(Sec. III-D: "output files are compressed and decompressed automatically").
+We implement a faithful, self-describing subset ("T4-mini"): per-config status,
+raw repeated observations, mean objective, and compile time, plus enough
+metadata to reconstruct the search space.
+
+The cache is what the simulation mode replays (Sec. III-C): every segment of a
+live evaluation (compile, run, overhead) is recorded so a tuning run can be
+replayed with exact simulated-time accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Mapping
+
+import zstandard
+
+from .searchspace import SearchSpace
+from .tunable import Config, Constraint, Tunable
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedResult:
+    status: str          # "ok" | "error"
+    time_s: float        # mean objective (inf for error)
+    times_s: tuple       # raw observations
+    compile_s: float
+    overhead_s: float = 0.0
+
+    @property
+    def charge_s(self) -> float:
+        """Simulated seconds a live evaluation of this config would cost:
+        compile + one execution of every recorded repeat + overhead."""
+        return self.compile_s + sum(self.times_s) + self.overhead_s
+
+
+class CacheFile:
+    """In-memory view of one brute-forced search space (kernel × device)."""
+
+    def __init__(self, kernel: str, device: str, space: SearchSpace,
+                 results: Mapping[str, CachedResult], meta: dict | None = None):
+        self.kernel = kernel
+        self.device = device
+        self.space = space
+        self.results = dict(results)
+        self.meta = dict(meta or {})
+
+    # ------------------------------------------------------------------- api
+    def lookup(self, config: Config) -> CachedResult:
+        return self.results[self.space.config_id(config)]
+
+    @property
+    def ok_values(self) -> list:
+        return [r.time_s for r in self.results.values() if r.status == "ok"]
+
+    @property
+    def optimum(self) -> float:
+        vals = self.ok_values
+        if not vals:
+            raise ValueError("no valid results in cache")
+        return min(vals)
+
+    def mean_eval_charge(self) -> float:
+        """Average simulated cost of one fresh evaluation — used for the
+        calculated random-search baseline's time axis."""
+        charges = [r.charge_s for r in self.results.values()]
+        return sum(charges) / len(charges)
+
+    # -------------------------------------------------------------------- io
+    def to_json(self) -> dict:
+        return {
+            "format": "T4-mini",
+            "format_version": "1.0",
+            "kernel": self.kernel,
+            "device": self.device,
+            "objective": "time_s",
+            "tunables": {t.name: list(t.values) for t in self.space.tunables},
+            "constraints": [c.description for c in self.space.constraints],
+            "meta": self.meta,
+            "results": {
+                key: {
+                    "status": r.status,
+                    "time_s": (r.time_s if r.time_s != float("inf") else None),
+                    "times_s": list(r.times_s),
+                    "compile_s": r.compile_s,
+                    "overhead_s": r.overhead_s,
+                }
+                for key, r in self.results.items()
+            },
+        }
+
+    def save(self, path: str) -> None:
+        """Write .json or .json.zst depending on extension; atomic rename."""
+        payload = json.dumps(self.to_json()).encode()
+        if path.endswith(".zst"):
+            payload = zstandard.ZstdCompressor(level=9).compress(payload)
+        tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+
+    @staticmethod
+    def load(path: str, space: SearchSpace | None = None) -> "CacheFile":
+        with open(path, "rb") as f:
+            payload = f.read()
+        if path.endswith(".zst"):
+            payload = zstandard.ZstdDecompressor().decompress(payload)
+        d = json.loads(payload)
+        if d.get("format") != "T4-mini":
+            raise ValueError(f"unknown cache format {d.get('format')!r}")
+        if space is None:
+            # Reconstruct the space. Static constraints excluded configs from
+            # the brute force entirely, so membership in `results` *is* the
+            # original validity predicate (runtime failures are present with
+            # status "error" — they belong to the space).
+            tunables = tuple(Tunable(n, tuple(v)) for n, v in d["tunables"].items())
+            names = tuple(d["tunables"].keys())
+            present = frozenset(d["results"].keys())
+            member = Constraint(
+                lambda conf, _n=names, _p=present:
+                    ",".join(str(conf[n]) for n in _n) in _p,
+                "config present in brute-forced results")
+            space = SearchSpace(tunables, (member,),
+                                name=f"{d['kernel']}@{d['device']}")
+        results = {
+            key: CachedResult(
+                status=r["status"],
+                time_s=(float("inf") if r["time_s"] is None else r["time_s"]),
+                times_s=tuple(r["times_s"]),
+                compile_s=r["compile_s"],
+                overhead_s=r.get("overhead_s", 0.0),
+            )
+            for key, r in d["results"].items()
+        }
+        return CacheFile(d["kernel"], d["device"], space, results, d.get("meta"))

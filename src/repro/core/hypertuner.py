@@ -1,0 +1,195 @@
+"""Tuning the tuner (paper Eq. 4, Sec. III-B/E, IV-B/C/D).
+
+Two modes:
+
+  * ``exhaustive_hypertune`` — enumerate a hyperparameter grid (the paper's
+    Table III), score every configuration with the methodology across the
+    training search spaces, and rank. This quantifies the impact of
+    hyperparameter tuning (paper Sec. IV-B: +94.8 % average).
+  * ``meta_hypertune`` — treat the hyperparameter space as an ordinary
+    SearchSpace and explore it with any registered strategy ("the same
+    optimization strategies that are already included" — Sec. IV-C), enabling
+    the extended, non-exhaustive tuning of Table IV (+204.7 %).
+
+The bridge is ``FunctionRunner``: a Runner whose objective is the *negated*
+aggregate performance score (strategies minimize), and
+``results_to_cache``: exhaustive results repackaged as a synthetic T4 cache
+so that meta-strategies can themselves be scored with the methodology
+(paper Fig. 6) — the recursion that gives the paper its title.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Mapping, Sequence
+
+from .budget import Budget
+from .cache import CachedResult, CacheFile
+from .methodology import AggregateReport, SpaceScorer, evaluate_strategy
+from .runner import Runner
+from .searchspace import SearchSpace
+from .strategies import STRATEGIES, get_strategy
+from .strategies.base import hyperparam_id
+from .tunable import Config, tunables_from_dict
+
+
+def hyperparam_searchspace(strategy_name: str, extended: bool = False) -> SearchSpace:
+    cls = STRATEGIES[strategy_name]
+    grid = cls.EXTENDED_SPACE if extended else cls.HYPERPARAM_SPACE
+    if not grid:
+        raise ValueError(f"{strategy_name} exposes no hyperparameters")
+    return SearchSpace(tunables_from_dict(grid), (),
+                       name=f"hp[{strategy_name}{'-ext' if extended else ''}]")
+
+
+@dataclasses.dataclass
+class HyperConfigResult:
+    hyperparams: dict
+    report: AggregateReport
+
+    @property
+    def score(self) -> float:
+        return self.report.score
+
+
+@dataclasses.dataclass
+class HyperTuningResult:
+    strategy: str
+    results: dict                  # hp_id -> HyperConfigResult
+    wall_seconds: float
+    simulated_seconds: float       # what live tuning would have cost
+
+    def ranked(self) -> list:
+        return sorted(self.results.values(), key=lambda r: -r.score)
+
+    @property
+    def best(self) -> HyperConfigResult:
+        return self.ranked()[0]
+
+    @property
+    def worst(self) -> HyperConfigResult:
+        return self.ranked()[-1]
+
+    def closest_to_mean(self) -> HyperConfigResult:
+        """The paper's 'average' configuration: closest score to the mean."""
+        rs = list(self.results.values())
+        mean = sum(r.score for r in rs) / len(rs)
+        return min(rs, key=lambda r: abs(r.score - mean))
+
+    @property
+    def scores(self) -> list:
+        return [r.score for r in self.results.values()]
+
+
+def score_hyperconfig(strategy_name: str, hyperparams: Mapping,
+                      scorers: Sequence[SpaceScorer], repeats: int = 25,
+                      seed: int = 0) -> AggregateReport:
+    return evaluate_strategy(lambda: get_strategy(strategy_name, **hyperparams),
+                             scorers, repeats=repeats, seed=seed)
+
+
+def exhaustive_hypertune(strategy_name: str, scorers: Sequence[SpaceScorer],
+                         repeats: int = 25, seed: int = 0,
+                         progress: Callable[[str], None] | None = None
+                         ) -> HyperTuningResult:
+    space = hyperparam_searchspace(strategy_name)
+    t0 = time.perf_counter()
+    results: dict[str, HyperConfigResult] = {}
+    simulated = 0.0
+    for i, cfg in enumerate(space.valid_configs):
+        hp = space.as_dict(cfg)
+        report = score_hyperconfig(strategy_name, hp, scorers, repeats, seed)
+        results[hyperparam_id(hp)] = HyperConfigResult(hp, report)
+        simulated += report.simulated_seconds
+        if progress:
+            progress(f"[{i+1}/{space.size}] {strategy_name} "
+                     f"{hyperparam_id(hp)} -> {report.score:+.4f}")
+    return HyperTuningResult(strategy_name, results,
+                             time.perf_counter() - t0, simulated)
+
+
+# --------------------------------------------------------------------- meta
+class FunctionRunner(Runner):
+    """Runner over an arbitrary objective; used for the meta level where one
+    'evaluation' is a full (simulated) tuning campaign of a hyperparameter
+    configuration. The charge is that campaign's simulated tuning cost, so
+    meta-traces live on the same simulated-time axis as everything else."""
+
+    def __init__(self, space: SearchSpace, fn: Callable[[Config], tuple],
+                 budget: Budget):
+        super().__init__(space, budget)
+        self.fn = fn
+
+    def _evaluate(self, config: Config) -> tuple:
+        value, charge = self.fn(config)
+        status = "ok" if math.isfinite(value) else "error"
+        return value, status, charge
+
+
+@dataclasses.dataclass
+class MetaTuningResult:
+    strategy: str
+    meta_strategy: str
+    best_hyperparams: dict
+    best_score: float
+    evaluated: dict                # hp_id -> score
+    trace: list                    # FunctionRunner trace (simulated time axis)
+    wall_seconds: float
+
+
+def meta_hypertune(strategy_name: str, meta_strategy_name: str,
+                   scorers: Sequence[SpaceScorer], extended: bool = True,
+                   max_hp_evals: int = 50, repeats: int = 25, seed: int = 0,
+                   meta_hyperparams: Mapping | None = None,
+                   progress: Callable[[str], None] | None = None
+                   ) -> MetaTuningResult:
+    """Optimize hyperparameters with a strategy as the meta-strategy (Eq. 4)."""
+    space = hyperparam_searchspace(strategy_name, extended=extended)
+    evaluated: dict[str, float] = {}
+    t0 = time.perf_counter()
+
+    def objective(cfg: Config) -> tuple:
+        hp = space.as_dict(cfg)
+        report = score_hyperconfig(strategy_name, hp, scorers, repeats, seed)
+        evaluated[hyperparam_id(hp)] = report.score
+        if progress:
+            progress(f"meta[{meta_strategy_name}] {strategy_name} "
+                     f"{hyperparam_id(hp)} -> {report.score:+.4f}")
+        # minimize negated score; charge the simulated cost of the campaign
+        return -report.score, report.simulated_seconds
+
+    runner = FunctionRunner(space, objective, Budget(max_evals=max_hp_evals))
+    meta = get_strategy(meta_strategy_name, **(meta_hyperparams or {}))
+    import random as _random
+    best = meta.run(space, runner, _random.Random(seed))
+    if best is None:
+        raise RuntimeError("meta-strategy found no valid hyperparameters")
+    return MetaTuningResult(
+        strategy_name, meta_strategy_name,
+        space.as_dict(best.config), -best.value, evaluated,
+        list(runner.trace), time.perf_counter() - t0)
+
+
+# ------------------------------------------------- meta-level methodology
+def results_to_cache(result: HyperTuningResult,
+                     mean_campaign_seconds: float | None = None) -> CacheFile:
+    """Repackage exhaustive hypertuning results as a synthetic T4 cache whose
+    objective is the negated score — so meta-strategies can be scored with
+    the same methodology (paper Fig. 6). Every 'config' charges the mean
+    campaign cost (each hyperparameter evaluation costs about the same)."""
+    space = hyperparam_searchspace(result.strategy)
+    n = max(1, len(result.results))
+    charge = (mean_campaign_seconds
+              if mean_campaign_seconds is not None
+              else result.simulated_seconds / n)
+    cached = {}
+    for hp_id, r in result.results.items():
+        key = space.config_id(space.from_dict(r.hyperparams))
+        # objective = -score (dimensionless); the *charge* (time axis) is the
+        # campaign cost, carried entirely by compile_s so that
+        # charge_s == campaign seconds exactly.
+        cached[key] = CachedResult(status="ok", time_s=-r.score,
+                                   times_s=(), compile_s=charge)
+    return CacheFile(f"hp_{result.strategy}", "meta", space, cached,
+                     meta={"level": "hyperparameter", "strategy": result.strategy})

@@ -1,0 +1,230 @@
+"""Performance-score methodology (paper Sec. III-B, Eqs. 2–3).
+
+Implements the community methodology the paper builds on [29]:
+
+  * a *calculated* random-search baseline in the **time domain**: the mean
+    best-so-far over a fixed set of virtual random-search runs (sampling
+    without replacement, each draw charging that configuration's own
+    recorded compile+run time). A draw-count-domain hypergeometric
+    expectation is optimistic here because objective value and evaluation
+    cost are positively correlated (slow kernels also take longer to
+    measure); the time-domain curve is the honest baseline. It is
+    deterministic: the virtual runs use a fixed seed.
+  * a per-space *budget*: the simulated time at which the baseline reaches
+    the cutoff fraction (default 95 %) of the median→optimum distance;
+  * per-run performance curves ``P_t`` (Eq. 2) sampled at equidistant
+    simulated-time points, averaged over repeats;
+  * aggregation across search spaces into one score (Eq. 3): 0 ⇔ baseline,
+    1 ⇔ optimum found immediately, negative ⇔ worse than baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+import zlib
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .budget import Budget
+from .cache import CacheFile
+from .runner import SimulationRunner
+from .strategies.base import Strategy
+
+DEFAULT_CUTOFF = 0.95
+DEFAULT_SAMPLES = 50
+BASELINE_RUNS = 1000
+BASELINE_SEED = 0xB0B
+HARD_TIME_CAP_EVALS = 3000  # tractability cap: budget ≤ cap × mean_charge
+
+
+@dataclasses.dataclass
+class SpaceScorer:
+    """Precomputed scoring context for one search space (one cache file)."""
+
+    cache: CacheFile
+    values: np.ndarray        # sorted finite objective values (ascending)
+    n_total: int              # |space| incl. runtime failures
+    mean_charge: float        # simulated seconds per fresh evaluation
+    optimum: float
+    median: float
+    budget_s: float
+    n_budget: int             # ≈ budget_s / mean_charge (informational)
+    # virtual random-search runs: improvement step functions
+    _imp_times: np.ndarray    # (R, K) padded with +inf
+    _imp_values: np.ndarray   # (R, K) padded with worst value
+
+    @property
+    def name(self) -> str:
+        return f"{self.cache.kernel}@{self.cache.device}"
+
+    # ----------------------------------------------------------- baseline
+    def baseline_at_time(self, t) -> np.ndarray:
+        """S_baseline(t): mean best-so-far of the virtual runs at time(s) t.
+
+        Runs with no finite observation by t impute the worst finite value.
+        """
+        t_arr = np.atleast_1d(np.asarray(t, dtype=np.float64))
+        # count improvements with time <= t per run: (R, T)
+        counts = (self._imp_times[:, :, None] <= t_arr[None, None, :]).sum(axis=1)
+        idx = np.maximum(counts - 1, 0)
+        vals = np.take_along_axis(self._imp_values, idx, axis=1)
+        vals = np.where(counts > 0, vals, self.values[-1])
+        out = vals.mean(axis=0)
+        return out if np.ndim(t) else float(out[0])
+
+    # ------------------------------------------------------------- scoring
+    def sample_times(self, n_samples: int = DEFAULT_SAMPLES) -> np.ndarray:
+        return np.linspace(self.budget_s / n_samples, self.budget_s, n_samples)
+
+    def score_trace(self, trace: Sequence[tuple], times: np.ndarray,
+                    baseline: np.ndarray | None = None) -> np.ndarray:
+        """P_t (Eq. 2) for one run's trace [(cum_seconds, value, config)...].
+
+        Before the first finite observation the run scores 0 (== baseline).
+        """
+        if baseline is None:
+            baseline = self.baseline_at_time(times)
+        best = math.inf
+        ts, bs = [], []
+        for t_cum, value, _cfg in trace:
+            if value < best:
+                best = value
+                ts.append(t_cum)
+                bs.append(best)
+        out = np.zeros(len(times))
+        for j, t in enumerate(times):
+            k = np.searchsorted(ts, t, side="right") - 1
+            if k < 0 or not math.isfinite(bs[k]):
+                out[j] = 0.0
+                continue
+            sb = baseline[j]
+            denom = sb - self.optimum
+            if denom <= 0:
+                out[j] = 1.0 if bs[k] <= self.optimum else 0.0
+            else:
+                out[j] = (sb - bs[k]) / denom
+        return out
+
+
+def _virtual_random_runs(values: np.ndarray, charges: np.ndarray,
+                         n_runs: int, seed: int) -> tuple:
+    """Improvement step functions of ``n_runs`` virtual random-search runs
+    (without replacement, per-config charges). Returns padded (times, bests)."""
+    rng = np.random.default_rng(seed)
+    n = len(values)
+    imp_t: list[np.ndarray] = []
+    imp_v: list[np.ndarray] = []
+    finite = np.isfinite(values)
+    worst = values[finite].max()
+    for _ in range(n_runs):
+        perm = rng.permutation(n)
+        v = values[perm]
+        t = np.cumsum(charges[perm])
+        run_min = np.fmin.accumulate(np.where(np.isfinite(v), v, np.inf))
+        # improvement points: first occurrence of each new minimum
+        is_imp = np.ones(n, bool)
+        is_imp[1:] = run_min[1:] < run_min[:-1]
+        is_imp &= np.isfinite(run_min)
+        imp_t.append(t[is_imp])
+        imp_v.append(run_min[is_imp])
+    k = max(len(a) for a in imp_t)
+    times = np.full((n_runs, k), np.inf)
+    bests = np.full((n_runs, k), worst)
+    for i, (a, b) in enumerate(zip(imp_t, imp_v)):
+        times[i, :len(a)] = a
+        bests[i, :len(b)] = b
+    return times, bests
+
+
+def make_scorer(cache: CacheFile, cutoff: float = DEFAULT_CUTOFF,
+                n_baseline_runs: int = BASELINE_RUNS,
+                hard_cap: int = HARD_TIME_CAP_EVALS) -> SpaceScorer:
+    all_values = np.array([r.time_s for r in cache.results.values()],
+                          dtype=np.float64)
+    all_charges = np.array([r.charge_s for r in cache.results.values()],
+                           dtype=np.float64)
+    values = np.sort(all_values[np.isfinite(all_values)])
+    if values.size == 0:
+        raise ValueError(f"cache {cache.kernel}@{cache.device} has no ok results")
+    n_total = len(cache.results)
+    mean_charge = float(all_charges.mean())
+    optimum = float(values[0])
+    median = float(np.median(values))
+    seed = BASELINE_SEED ^ zlib.crc32(f"{cache.kernel}@{cache.device}".encode())
+    imp_t, imp_v = _virtual_random_runs(all_values, all_charges,
+                                        n_baseline_runs, seed)
+    scorer = SpaceScorer(cache, values, n_total, mean_charge, optimum, median,
+                         budget_s=0.0, n_budget=0, _imp_times=imp_t,
+                         _imp_values=imp_v)
+    # budget: first time the baseline crosses median - cutoff*(median - opt),
+    # by bisection (the baseline is monotone non-increasing in t)
+    target = median - cutoff * (median - optimum)
+    lo, hi = float(all_charges.min()), float(hard_cap * mean_charge)
+    if scorer.baseline_at_time(hi) > target:
+        budget = hi  # cap reached; effective cutoff < requested
+    else:
+        for _ in range(48):
+            mid = 0.5 * (lo + hi)
+            if scorer.baseline_at_time(mid) <= target:
+                hi = mid
+            else:
+                lo = mid
+        budget = hi
+    scorer.budget_s = budget
+    scorer.n_budget = max(1, int(round(budget / mean_charge)))
+    return scorer
+
+
+@dataclasses.dataclass
+class AggregateReport:
+    """Result of evaluating one strategy (with fixed hyperparameters)."""
+
+    score: float                       # Eq. 3 aggregate
+    curve: np.ndarray                  # mean P_t over spaces (len n_samples)
+    per_space: dict                    # name -> mean P_t curve
+    per_space_score: dict              # name -> float
+    fresh_evals: int = 0
+    wall_seconds: float = 0.0
+    simulated_seconds: float = 0.0
+
+
+def evaluate_strategy(make_strategy: Callable[[], Strategy],
+                      scorers: Sequence[SpaceScorer],
+                      repeats: int = 25,
+                      n_samples: int = DEFAULT_SAMPLES,
+                      seed: int = 0) -> AggregateReport:
+    """Run a strategy ``repeats`` times on every space in simulation mode and
+    aggregate performance curves per Eq. 3."""
+    names = [s.name for s in scorers]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate space names in scorers: {names}")
+    per_space: dict[str, np.ndarray] = {}
+    per_space_score: dict[str, float] = {}
+    fresh = 0
+    wall = 0.0
+    simulated = 0.0
+    for scorer in scorers:
+        times = scorer.sample_times(n_samples)
+        baseline = scorer.baseline_at_time(times)
+        acc = np.zeros(n_samples)
+        for r in range(repeats):
+            # stable per-(space, repeat, seed) rng — crc32 is process-
+            # independent (str hash is randomized per interpreter)
+            rng = random.Random((seed * 1_000_003 + r)
+                                ^ zlib.crc32(scorer.name.encode()))
+            runner = SimulationRunner(scorer.cache,
+                                      Budget(max_seconds=scorer.budget_s))
+            strategy = make_strategy()
+            strategy.run(scorer.cache.space, runner, rng)
+            acc += scorer.score_trace(runner.trace, times, baseline)
+            fresh += runner.fresh_evals
+            wall += runner.wall_seconds
+            simulated += runner.budget.spent_seconds
+        curve = acc / repeats
+        per_space[scorer.name] = curve
+        per_space_score[scorer.name] = float(curve.mean())
+    mean_curve = np.mean(np.stack(list(per_space.values())), axis=0)
+    return AggregateReport(float(mean_curve.mean()), mean_curve, per_space,
+                           per_space_score, fresh, wall, simulated)

@@ -1,0 +1,141 @@
+"""Runners: how a strategy's config evaluations are satisfied.
+
+Three runners implement the same protocol (paper Fig. 1 / Sec. III-E):
+
+  * ``SimulationRunner`` — the paper's simulation mode. Replays a T4 cache:
+    returns the recorded result and charges the *recorded* compile/run times
+    to a simulated-time budget. "From the point of view of the optimization
+    algorithm, there is no perceivable difference between live tuning and the
+    simulation mode."
+  * ``CostModelRunner`` — computes results on the fly from the analytical
+    cost model (used to brute-force the hub; identical values to the cache
+    since the model is deterministic).
+  * ``LiveRunner`` — times an actual callable (used for Pallas interpret-mode
+    kernels on CPU, and on-device when real hardware is present).
+
+All runners memoize: re-evaluating a config returns the cached observation and
+charges nothing (Kernel Tuner cache semantics; see budget.py).
+
+Every fresh evaluation is appended to ``trace`` as
+``(cumulative_simulated_seconds, objective_value, config)`` — the methodology
+computes best-so-far performance curves from this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from .budget import Budget, BudgetExhausted
+from .cache import CacheFile, CachedResult
+from .costmodel import KernelWorkload, estimate
+from .devices import DeviceModel
+from .searchspace import SearchSpace
+from .tunable import Config
+
+INVALID = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class Observation:
+    config: Config
+    value: float               # objective (mean time_s); inf when failed
+    status: str                # "ok" | "error"
+    charge_s: float            # simulated seconds charged
+
+
+class Runner:
+    """Base: memoization, budget accounting, trace recording."""
+
+    def __init__(self, space: SearchSpace, budget: Budget):
+        self.space = space
+        self.budget = budget
+        self.memo: dict[str, Observation] = {}
+        self.trace: list[tuple[float, float, Config]] = []
+        self.fresh_evals = 0
+        self.wall_start = time.perf_counter()
+
+    # subclasses implement this
+    def _evaluate(self, config: Config) -> tuple[float, str, float]:
+        """Returns (value, status, charge_seconds)."""
+        raise NotImplementedError
+
+    def run(self, config: Config) -> Observation:
+        key = self.space.config_id(config)
+        hit = self.memo.get(key)
+        if hit is not None:
+            return hit
+        self.budget.check()  # raises BudgetExhausted when spent
+        value, status, charge = self._evaluate(config)
+        self.budget.charge(charge)
+        self.fresh_evals += 1
+        obs = Observation(config, value, status, charge)
+        self.memo[key] = obs
+        self.trace.append((self.budget.spent_seconds, value, config))
+        return obs
+
+    def __call__(self, config: Config) -> float:
+        return self.run(config).value
+
+    @property
+    def best(self) -> Observation | None:
+        ok = [o for o in self.memo.values() if o.status == "ok"]
+        return min(ok, key=lambda o: o.value) if ok else None
+
+    @property
+    def wall_seconds(self) -> float:
+        return time.perf_counter() - self.wall_start
+
+
+class SimulationRunner(Runner):
+    def __init__(self, cache: CacheFile, budget: Budget):
+        super().__init__(cache.space, budget)
+        self.cache = cache
+
+    def _evaluate(self, config: Config) -> tuple[float, str, float]:
+        try:
+            r: CachedResult = self.cache.lookup(config)
+        except KeyError:
+            # config outside the brute-forced set: treat as a failed compile
+            return INVALID, "error", self.cache.mean_eval_charge()
+        return r.time_s, r.status, r.charge_s
+
+
+class CostModelRunner(Runner):
+    def __init__(self, space: SearchSpace, workload: KernelWorkload,
+                 device: DeviceModel, budget: Budget):
+        super().__init__(space, budget)
+        self.workload = workload
+        self.device = device
+
+    def _evaluate(self, config: Config) -> tuple[float, str, float]:
+        cid = self.space.config_id(config)
+        est = estimate(self.workload, self.space.as_dict(config), self.device, cid)
+        charge = est.compile_s + sum(est.times_s) + self.device.overhead_s
+        return est.time_s, est.status, charge
+
+
+class LiveRunner(Runner):
+    """Times ``fn(config_dict)``; exceptions are runtime failures."""
+
+    def __init__(self, space: SearchSpace, fn: Callable, budget: Budget,
+                 repeats: int = 3):
+        super().__init__(space, budget)
+        self.fn = fn
+        self.repeats = repeats
+
+    def _evaluate(self, config: Config) -> tuple[float, str, float]:
+        d = self.space.as_dict(config)
+        t0 = time.perf_counter()
+        try:
+            self.fn(d)  # warmup/compile
+            times = []
+            for _ in range(self.repeats):
+                t1 = time.perf_counter()
+                self.fn(d)
+                times.append(time.perf_counter() - t1)
+            value = sum(times) / len(times)
+            status = "ok"
+        except Exception:
+            value, status = INVALID, "error"
+        return value, status, time.perf_counter() - t0

@@ -1,0 +1,69 @@
+"""Strategy base class.
+
+A strategy explores one SearchSpace through a Runner until the budget is
+exhausted (``BudgetExhausted`` from the runner) or its own termination
+criterion fires. Strategies are pure-Python orchestration — every objective
+evaluation goes through the runner, so live/simulated execution is
+indistinguishable to the algorithm (paper Sec. III-E).
+
+Hyperparameters: each strategy declares ``DEFAULTS`` plus two hyperparameter
+spaces — ``HYPERPARAM_SPACE`` (the paper's Table III, exhaustive-tuning sized)
+and ``EXTENDED_SPACE`` (Table IV, meta-strategy sized). The hypertuner treats
+these as ordinary SearchSpaces: tuning the tuner reuses the same machinery.
+"""
+from __future__ import annotations
+
+import random
+from typing import Mapping
+
+from ..budget import BudgetExhausted
+from ..runner import Observation, Runner
+from ..searchspace import SearchSpace
+
+# Objective values can be inf (failed configs); strategies that do arithmetic
+# on fitness use this finite stand-in.
+FAILURE_FITNESS = 1e12
+
+
+class Strategy:
+    name: str = "base"
+    DEFAULTS: dict = {}
+    HYPERPARAM_SPACE: dict = {}
+    EXTENDED_SPACE: dict = {}
+
+    def __init__(self, **hyperparams):
+        unknown = set(hyperparams) - set(self.DEFAULTS)
+        if unknown:
+            raise ValueError(f"{self.name}: unknown hyperparameters {sorted(unknown)}")
+        self.hyperparams = {**self.DEFAULTS, **hyperparams}
+
+    # ------------------------------------------------------------------ api
+    def run(self, space: SearchSpace, runner: Runner, rng: random.Random) -> Observation | None:
+        """Optimize; returns the best observation found (None if nothing ok).
+
+        The runner records the full trace; callers read ``runner.trace``.
+        """
+        try:
+            self._optimize(space, runner, rng)
+        except BudgetExhausted:
+            pass
+        return runner.best
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- helpers
+    @staticmethod
+    def fitness(value: float) -> float:
+        return FAILURE_FITNESS if value == float("inf") else value
+
+    def hp(self, key: str):
+        return self.hyperparams[key]
+
+    def __repr__(self):
+        hp = ",".join(f"{k}={v}" for k, v in sorted(self.hyperparams.items()))
+        return f"{self.name}({hp})"
+
+
+def hyperparam_id(hp: Mapping) -> str:
+    return ",".join(f"{k}={hp[k]}" for k in sorted(hp))

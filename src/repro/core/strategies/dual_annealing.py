@@ -1,0 +1,56 @@
+"""Dual Annealing (paper Table III hyperparameters).
+
+Wraps ``scipy.optimize.dual_annealing`` over the continuous index space, as
+Kernel Tuner does. The single tuned hyperparameter is the local-search
+``method`` (paper Table III: COBYLA, L-BFGS-B, SLSQP, CG, Powell,
+Nelder-Mead, BFGS, trust-constr). Positions are rounded/repaired to valid
+configs inside the objective; failures get a large finite penalty so the
+numerical local phases stay well-defined.
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import scipy.optimize
+
+from ..budget import BudgetExhausted
+from ..runner import Runner
+from ..searchspace import SearchSpace
+from .base import FAILURE_FITNESS, Strategy
+
+METHODS = ("COBYLA", "L-BFGS-B", "SLSQP", "CG", "Powell", "Nelder-Mead",
+           "BFGS", "trust-constr")
+
+
+class DualAnnealing(Strategy):
+    name = "dual_annealing"
+    DEFAULTS = {"method": "Powell"}
+    HYPERPARAM_SPACE = {"method": METHODS}
+    EXTENDED_SPACE = {"method": METHODS}
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        method = str(self.hp("method"))
+        bounds = space.bounds
+        # degenerate 1-value dims break scipy bounds; widen epsilon
+        bounds = [(lo, hi if hi > lo else lo + 1e-6) for lo, hi in bounds]
+
+        def objective(x: np.ndarray) -> float:
+            cfg = space.nearest_valid(space.from_indices(x), rng)
+            v = runner(cfg)  # raises BudgetExhausted when spent
+            return FAILURE_FITNESS if v == float("inf") else v
+
+        while True:  # restart until the budget stops us
+            try:
+                scipy.optimize.dual_annealing(
+                    objective, bounds,
+                    minimizer_kwargs={"method": method},
+                    seed=rng.getrandbits(32),
+                    maxiter=1000,
+                )
+            except BudgetExhausted:
+                raise
+            except Exception:
+                # some local methods can fail on the rounded landscape
+                # (e.g. singular Hessian approximations) — restart
+                continue

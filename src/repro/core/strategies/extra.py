@@ -1,0 +1,177 @@
+"""Additional strategies beyond the paper's four evaluated algorithms.
+
+Kernel Tuner ships 20+ strategies (paper Table I); we implement four more
+here so the hypertuner has a broader pool for meta-strategy experiments:
+Differential Evolution, Basin Hopping, Greedy Iterated Local Search, and
+Multi-start Local Search. Each declares hyperparameter spaces so they are
+first-class citizens of the "tuning the tuner" pipeline.
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from ..runner import Runner
+from ..searchspace import SearchSpace
+from .base import Strategy
+
+
+class DifferentialEvolution(Strategy):
+    name = "differential_evolution"
+    DEFAULTS = {"popsize": 20, "maxiter": 100, "F": 0.8, "CR": 0.9}
+    HYPERPARAM_SPACE = {
+        "popsize": (10, 20, 30),
+        "maxiter": (50, 100, 150),
+        "F": (0.4, 0.8, 1.2),
+        "CR": (0.5, 0.7, 0.9),
+    }
+    EXTENDED_SPACE = {
+        "popsize": tuple(range(4, 51, 2)),
+        "maxiter": tuple(range(10, 201, 10)),
+        "F": tuple(round(0.2 + 0.1 * i, 1) for i in range(15)),
+        "CR": tuple(round(0.1 + 0.1 * i, 1) for i in range(9)),
+    }
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        popsize = max(4, int(self.hp("popsize")))
+        maxiter = int(self.hp("maxiter"))
+        F, CR = float(self.hp("F")), float(self.hp("CR"))
+        np_rng = np.random.default_rng(rng.getrandbits(64))
+        lo = np.zeros(len(space.tunables))
+        hi = np.array([t.cardinality - 1 for t in space.tunables], dtype=float)
+
+        def eval_idx(x) -> float:
+            cfg = space.nearest_valid(space.from_indices(x), rng)
+            return self.fitness(runner(cfg))
+
+        while True:
+            pop = np.stack([space.to_indices(space.random_config(rng))
+                            for _ in range(popsize)])
+            fit = np.array([eval_idx(x) for x in pop])
+            for _ in range(maxiter):
+                for i in range(popsize):
+                    a, b, c = np_rng.choice(
+                        [j for j in range(popsize) if j != i], 3, replace=False)
+                    mutant = np.clip(pop[a] + F * (pop[b] - pop[c]), lo, hi)
+                    cross = np_rng.uniform(size=len(lo)) < CR
+                    cross[np_rng.integers(len(lo))] = True
+                    trial = np.where(cross, mutant, pop[i])
+                    f = eval_idx(trial)
+                    if f <= fit[i]:
+                        pop[i], fit[i] = trial, f
+
+
+class BasinHopping(Strategy):
+    name = "basin_hopping"
+    DEFAULTS = {"T": 1.0, "stepsize": 2, "local_iters": 32}
+    HYPERPARAM_SPACE = {
+        "T": (0.5, 1.0, 1.5),
+        "stepsize": (1, 2, 4),
+        "local_iters": (16, 32, 64),
+    }
+    EXTENDED_SPACE = {
+        "T": tuple(round(0.1 * i, 1) for i in range(1, 21)),
+        "stepsize": (1, 2, 3, 4, 6, 8),
+        "local_iters": (8, 16, 24, 32, 48, 64, 96, 128),
+    }
+
+    def _greedy_descent(self, start, space, runner, max_iters):
+        cur, f_cur = start, self.fitness(runner(start))
+        for _ in range(max_iters):
+            improved = False
+            for n in space.neighbors(cur, strictly_adjacent=True):
+                f = self.fitness(runner(n))
+                if f < f_cur:
+                    cur, f_cur, improved = n, f, True
+                    break
+            if not improved:
+                break
+        return cur, f_cur
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        import math
+        T = float(self.hp("T"))
+        step = int(self.hp("stepsize"))
+        local_iters = int(self.hp("local_iters"))
+        cur, f_cur = self._greedy_descent(space.random_config(rng), space,
+                                          runner, local_iters)
+        while True:
+            # hop: jump `step` positions in value-order on a few tunables
+            jumped = list(cur)
+            for i, t in enumerate(space.tunables):
+                if rng.random() < 0.5:
+                    j = t.index_of(jumped[i]) + rng.choice((-step, step))
+                    j = max(0, min(t.cardinality - 1, j))
+                    jumped[i] = t.values[j]
+            start = space.nearest_valid(tuple(jumped), rng)
+            cand, f_cand = self._greedy_descent(start, space, runner, local_iters)
+            d_rel = (f_cand - f_cur) / max(abs(f_cur), 1e-30)
+            if d_rel <= 0 or rng.random() < math.exp(-d_rel / max(T, 1e-9)):
+                cur, f_cur = cand, f_cand
+
+
+class GreedyILS(Strategy):
+    name = "greedy_ils"
+    DEFAULTS = {"perturbation": 2, "restart_chance": 0.05}
+    HYPERPARAM_SPACE = {
+        "perturbation": (1, 2, 4),
+        "restart_chance": (0.0, 0.05, 0.2),
+    }
+    EXTENDED_SPACE = {
+        "perturbation": (1, 2, 3, 4, 6, 8),
+        "restart_chance": (0.0, 0.01, 0.02, 0.05, 0.1, 0.2, 0.4),
+    }
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        k = int(self.hp("perturbation"))
+        p_restart = float(self.hp("restart_chance"))
+        cur = space.random_config(rng)
+        f_cur = self.fitness(runner(cur))
+        while True:
+            # greedy descent to local optimum (best-improvement)
+            while True:
+                nbrs = space.neighbors(cur)
+                best_n, best_f = None, f_cur
+                for n in nbrs:
+                    f = self.fitness(runner(n))
+                    if f < best_f:
+                        best_n, best_f = n, f
+                if best_n is None:
+                    break
+                cur, f_cur = best_n, best_f
+            # perturb k random tunables (or restart)
+            if rng.random() < p_restart:
+                cur = space.random_config(rng)
+            else:
+                out = list(cur)
+                idxs = rng.sample(range(len(space.tunables)),
+                                  min(k, len(space.tunables)))
+                for i in idxs:
+                    t = space.tunables[i]
+                    out[i] = t.values[rng.randrange(t.cardinality)]
+                cur = space.nearest_valid(tuple(out), rng)
+            f_cur = self.fitness(runner(cur))
+
+
+class MultiStartLocalSearch(Strategy):
+    name = "mls"
+    DEFAULTS = {"adjacent_only": True}
+    HYPERPARAM_SPACE = {"adjacent_only": (True, False)}
+    EXTENDED_SPACE = {"adjacent_only": (True, False)}
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        adjacent = bool(self.hp("adjacent_only"))
+        while True:
+            cur = space.random_config(rng)
+            f_cur = self.fitness(runner(cur))
+            while True:
+                nbrs = space.neighbors(cur, strictly_adjacent=adjacent)
+                best_n, best_f = None, f_cur
+                for n in nbrs:
+                    f = self.fitness(runner(n))
+                    if f < best_f:
+                        best_n, best_f = n, f
+                if best_n is None:
+                    break
+                cur, f_cur = best_n, best_f

@@ -1,0 +1,118 @@
+"""Genetic Algorithm (paper Table III/IV hyperparameters).
+
+Rank-weighted parent selection, four crossover methods matching Kernel
+Tuner's (single_point, two_point, uniform, disruptive_uniform), per-gene
+mutation with probability 1/mutation_chance, invalid children repaired to the
+nearest valid config.
+
+Hyperparameters:
+  method:          crossover operator
+  popsize:         population size           {10, 20, 30} / {2 … 50}
+  maxiter:         number of generations     {50, 100, 150} / {10 … 200}
+  mutation_chance: inverse mutation rate     {5, 10, 20} / {5 … 100}
+"""
+from __future__ import annotations
+
+import random
+
+from ..runner import Runner
+from ..searchspace import SearchSpace
+from .base import Strategy
+
+
+def _single_point(a: tuple, b: tuple, rng: random.Random) -> tuple:
+    if len(a) < 2:
+        return a, b
+    p = rng.randrange(1, len(a))
+    return a[:p] + b[p:], b[:p] + a[p:]
+
+
+def _two_point(a: tuple, b: tuple, rng: random.Random) -> tuple:
+    if len(a) < 3:
+        return _single_point(a, b, rng)
+    p, q = sorted(rng.sample(range(1, len(a)), 2))
+    return (a[:p] + b[p:q] + a[q:], b[:p] + a[p:q] + b[q:])
+
+
+def _uniform(a: tuple, b: tuple, rng: random.Random) -> tuple:
+    c1, c2 = list(a), list(b)
+    for i in range(len(a)):
+        if rng.random() < 0.5:
+            c1[i], c2[i] = c2[i], c1[i]
+    return tuple(c1), tuple(c2)
+
+
+def _disruptive_uniform(a: tuple, b: tuple, rng: random.Random) -> tuple:
+    """Swap *every* differing gene with p=0.5 but guarantee at least half of
+    the differing genes swap (Kernel Tuner's disruptive variant: maximizes
+    mixing of dissimilar parents)."""
+    diff = [i for i in range(len(a)) if a[i] != b[i]]
+    rng.shuffle(diff)
+    k = max((len(diff) + 1) // 2, min(1, len(diff)))
+    c1, c2 = list(a), list(b)
+    for i in diff[:k]:
+        c1[i], c2[i] = c2[i], c1[i]
+    return tuple(c1), tuple(c2)
+
+
+CROSSOVERS = {
+    "single_point": _single_point,
+    "two_point": _two_point,
+    "uniform": _uniform,
+    "disruptive_uniform": _disruptive_uniform,
+}
+
+
+class GeneticAlgorithm(Strategy):
+    name = "genetic_algorithm"
+    DEFAULTS = {"method": "uniform", "popsize": 20, "maxiter": 100,
+                "mutation_chance": 10}
+    HYPERPARAM_SPACE = {
+        "method": tuple(CROSSOVERS),
+        "popsize": (10, 20, 30),
+        "maxiter": (50, 100, 150),
+        "mutation_chance": (5, 10, 20),
+    }
+    EXTENDED_SPACE = {
+        "method": tuple(CROSSOVERS),
+        "popsize": tuple(range(2, 51, 2)),
+        "maxiter": tuple(range(10, 201, 10)),
+        "mutation_chance": tuple(range(5, 101, 5)),
+    }
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        popsize = int(self.hp("popsize"))
+        generations = int(self.hp("maxiter"))
+        p_mut = 1.0 / float(self.hp("mutation_chance"))
+        crossover = CROSSOVERS[str(self.hp("method"))]
+
+        pop = [space.random_config(rng) for _ in range(popsize)]
+        while True:  # restart loop over full GA runs until budget exhausted
+            for _gen in range(generations):
+                scored = sorted(((self.fitness(runner(c)), i, c)
+                                 for i, c in enumerate(pop)),
+                                key=lambda t: (t[0], t[1]))
+                ranked = [c for _, _, c in scored]
+                # rank weights: best gets weight popsize, worst gets 1
+                weights = list(range(popsize, 0, -1))
+                children: list[tuple] = [ranked[0]]  # elitism: keep the best
+                while len(children) < popsize:
+                    a, b = rng.choices(ranked, weights=weights, k=2)
+                    c1, c2 = crossover(a, b, rng)
+                    for child in (c1, c2):
+                        child = self._mutate(child, space, rng, p_mut)
+                        child = space.nearest_valid(child, rng)
+                        children.append(child)
+                        if len(children) >= popsize:
+                            break
+                pop = children
+            pop = [space.random_config(rng) for _ in range(popsize)]
+
+    @staticmethod
+    def _mutate(config: tuple, space: SearchSpace, rng: random.Random,
+                p_mut: float) -> tuple:
+        out = list(config)
+        for i, t in enumerate(space.tunables):
+            if rng.random() < p_mut:
+                out[i] = t.values[rng.randrange(t.cardinality)]
+        return tuple(out)

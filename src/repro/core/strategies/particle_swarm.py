@@ -1,0 +1,77 @@
+"""Particle Swarm Optimization (paper Table III/IV hyperparameters).
+
+Standard PSO over the continuous index space of the tunables; positions are
+rounded to configs (repaired when invalid) for evaluation. The paper found
+the inertia ``w`` to have no meaningful effect (Kruskal-Wallis / mutual
+information sensitivity test, Sec. IV-A) and excludes it from tuning; it
+remains available as a hyperparameter with its Kernel Tuner default.
+
+Hyperparameters:
+  popsize: swarm size                {10, 20, 30} / {2 … 50}
+  maxiter: iterations                {50, 100, 150} / {10 … 200}
+  c1:      cognitive coefficient     {1.0, 2.0, 3.0} / {1.0 … 3.5}
+  c2:      social coefficient        {0.5, 1.0, 1.5} / {0.5 … 2.0}
+  w:       inertia (not tuned)       default 0.5
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from ..runner import Runner
+from ..searchspace import SearchSpace
+from .base import Strategy
+
+
+class ParticleSwarm(Strategy):
+    name = "pso"
+    DEFAULTS = {"popsize": 20, "maxiter": 100, "c1": 2.0, "c2": 1.0, "w": 0.5}
+    HYPERPARAM_SPACE = {
+        "popsize": (10, 20, 30),
+        "maxiter": (50, 100, 150),
+        "c1": (1.0, 2.0, 3.0),
+        "c2": (0.5, 1.0, 1.5),
+    }
+    EXTENDED_SPACE = {
+        "popsize": tuple(range(2, 51, 2)),
+        "maxiter": tuple(range(10, 201, 10)),
+        "c1": tuple(round(1.0 + 0.25 * i, 2) for i in range(11)),
+        "c2": tuple(round(0.5 + 0.25 * i, 2) for i in range(7)),
+    }
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        popsize = int(self.hp("popsize"))
+        maxiter = int(self.hp("maxiter"))
+        c1, c2, w = float(self.hp("c1")), float(self.hp("c2")), float(self.hp("w"))
+        np_rng = np.random.default_rng(rng.getrandbits(64))
+
+        lo = np.zeros(len(space.tunables))
+        hi = np.array([t.cardinality - 1 for t in space.tunables], dtype=float)
+        span = np.maximum(hi - lo, 1.0)
+
+        def eval_at(x: np.ndarray) -> tuple[float, tuple]:
+            cfg = space.nearest_valid(space.from_indices(x), rng)
+            return self.fitness(runner(cfg)), cfg
+
+        while True:  # restart loop until budget exhausted
+            pos = np.stack([space.to_indices(space.random_config(rng))
+                            for _ in range(popsize)])
+            vel = np_rng.uniform(-1, 1, pos.shape) * span * 0.25
+            pbest = pos.copy()
+            pbest_f = np.full(popsize, np.inf)
+            gbest, gbest_f = pos[0].copy(), np.inf
+            for _ in range(maxiter):
+                for i in range(popsize):
+                    f, cfg = eval_at(pos[i])
+                    if f < pbest_f[i]:
+                        pbest_f[i] = f
+                        pbest[i] = space.to_indices(cfg)
+                    if f < gbest_f:
+                        gbest_f = f
+                        gbest = space.to_indices(cfg)
+                r1 = np_rng.uniform(size=pos.shape)
+                r2 = np_rng.uniform(size=pos.shape)
+                vel = w * vel + c1 * r1 * (pbest - pos) + c2 * r2 * (gbest - pos)
+                vel = np.clip(vel, -span, span)
+                pos = np.clip(pos + vel, lo, hi)

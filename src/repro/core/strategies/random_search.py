@@ -1,0 +1,22 @@
+"""Random search — the methodology's baseline strategy (paper Sec. III-B)."""
+from __future__ import annotations
+
+import random
+
+from ..runner import Runner
+from ..searchspace import SearchSpace
+from .base import Strategy
+
+
+class RandomSearch(Strategy):
+    name = "random_search"
+    DEFAULTS: dict = {}
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        # Sample *without replacement* over valid configs (Kernel Tuner
+        # semantics: the tuner cache makes revisits free, so random search is
+        # effectively a random permutation of the space).
+        order = list(space.valid_configs)
+        rng.shuffle(order)
+        for config in order:
+            runner.run(config)

@@ -1,0 +1,63 @@
+"""Simulated Annealing (paper Table III/IV hyperparameters).
+
+Classic SA over the neighbor graph of the search space: accept worse moves
+with probability exp(-Δrel / T); geometric cooling T ← α·T; restart from a
+random config whenever T reaches T_min (budget permitting). Δrel is the
+*relative* objective difference so that temperature values are comparable
+across search spaces whose objectives differ by orders of magnitude.
+
+Hyperparameters (matching the paper):
+  T:        initial temperature            {0.5, 1.0, 1.5} / {0.1 … 2.0}
+  T_min:    restart temperature            {1e-4, 1e-3, 1e-2} / {1e-4 … 0.1}
+  alpha:    cooling rate                   {0.9925, 0.995, 0.9975}
+  maxiter:  moves attempted per temperature {1, 2, 3} / {1 … 10}
+"""
+from __future__ import annotations
+
+import math
+import random
+
+from ..runner import Runner
+from ..searchspace import SearchSpace
+from .base import Strategy
+
+
+class SimulatedAnnealing(Strategy):
+    name = "simulated_annealing"
+    DEFAULTS = {"T": 1.0, "T_min": 0.001, "alpha": 0.995, "maxiter": 2}
+    HYPERPARAM_SPACE = {
+        "T": (0.5, 1.0, 1.5),
+        "T_min": (0.0001, 0.001, 0.01),
+        "alpha": (0.9925, 0.995, 0.9975),
+        "maxiter": (1, 2, 3),
+    }
+    EXTENDED_SPACE = {
+        "T": tuple(round(0.1 * i, 1) for i in range(1, 21)),
+        "T_min": tuple(round(0.0001 + 0.001 * i, 4) for i in range(100)),
+        "alpha": (0.9925, 0.995, 0.9975),
+        "maxiter": tuple(range(1, 11)),
+    }
+
+    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+        T0 = float(self.hp("T"))
+        T_min = float(self.hp("T_min"))
+        alpha = float(self.hp("alpha"))
+        maxiter = int(self.hp("maxiter"))
+
+        while True:  # restart loop; terminated by BudgetExhausted
+            current = space.random_config(rng)
+            f_cur = self.fitness(runner(current))
+            T = T0
+            while T > T_min:
+                for _ in range(maxiter):
+                    nbrs = space.neighbors(current)
+                    if not nbrs:
+                        current = space.random_config(rng)
+                        f_cur = self.fitness(runner(current))
+                        continue
+                    cand = nbrs[rng.randrange(len(nbrs))]
+                    f_new = self.fitness(runner(cand))
+                    d_rel = (f_new - f_cur) / max(abs(f_cur), 1e-30)
+                    if d_rel <= 0 or rng.random() < math.exp(-d_rel / max(T, 1e-9)):
+                        current, f_cur = cand, f_new
+                T *= alpha

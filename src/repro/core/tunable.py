@@ -1,0 +1,62 @@
+"""Tunable parameters and constraints for auto-tuning search spaces.
+
+This mirrors the paper's setting (Sec. III-A): a search space ``X`` is the
+Cartesian product of tunable parameters' value sets, filtered by user-defined
+constraints (``restrictions`` in Kernel Tuner terminology).
+
+A configuration is represented as an immutable ``tuple`` of values in the
+order the tunables were declared; dict views are provided for readability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+Value = Any
+Config = tuple  # tuple of values, one per tunable, in declaration order
+
+
+@dataclasses.dataclass(frozen=True)
+class Tunable:
+    """One tunable parameter with its finite, ordered value set.
+
+    ``values`` must be non-empty and free of duplicates. Order matters: local
+    search strategies treat adjacent values as neighbors (the usual treatment
+    of numerical parameters in auto-tuning).
+    """
+
+    name: str
+    values: tuple
+
+    def __post_init__(self):
+        if not self.values:
+            raise ValueError(f"tunable {self.name!r} has no values")
+        if len(set(self.values)) != len(self.values):
+            raise ValueError(f"tunable {self.name!r} has duplicate values")
+
+    @property
+    def cardinality(self) -> int:
+        return len(self.values)
+
+    def index_of(self, value: Value) -> int:
+        return self.values.index(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """A predicate over a configuration dict; False ⇒ config is invalid.
+
+    ``fn`` receives a mapping {tunable_name: value}. ``description`` is used
+    in the T1-format dataset export.
+    """
+
+    fn: Callable[[Mapping[str, Value]], bool]
+    description: str = ""
+
+    def __call__(self, conf: Mapping[str, Value]) -> bool:
+        return bool(self.fn(conf))
+
+
+def tunables_from_dict(d: Mapping[str, Sequence[Value]]) -> tuple:
+    """Convenience: build Tunables from an ordered {name: values} mapping."""
+    return tuple(Tunable(name, tuple(vals)) for name, vals in d.items())

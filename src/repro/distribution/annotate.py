@@ -1,0 +1,96 @@
+"""Logical sharding annotations for model internals.
+
+GSPMD propagation can lose the batch sharding at ops it reshards poorly
+(e.g. the vocab-sharded embedding gather triggers "involuntary full
+rematerialization" and emits a replicated activation, which then poisons the
+whole layer scan). Production JAX model code pins the layout at a few key
+points with ``with_sharding_constraint``; these helpers do that with
+*logical* axes resolved against an ambient (mesh, layout):
+
+  logical "dp"  — the batch axis of activations
+  logical "tp"  — the tensor-parallel axis (heads / ffn / experts)
+  logical "sp"  — the sequence axis of the residual stream
+
+Layout policies (the §Perf tunable):
+  "2d"      baseline: dp=(pod,data), tp=model, sp unsharded — Megatron-style
+            TP with activation all-reduces.
+  "dp"      pure data parallel: dp=(pod,data,model) — all chips shard the
+            batch, no tensor parallelism of activations (params stay 2D
+            FSDP-sharded; XLA all-gathers them per layer).
+  "2d_seq"  sequence parallelism: like 2d but the residual stream is
+            sequence-sharded on the model axis between blocks (the
+            activation all-reduce becomes reduce-scatter + all-gather and
+            norms run on 1/16th of the tokens).
+
+``annotation_mesh(mesh, layout)`` installs the context (the launcher/dry-run
+does it); without one every annotate() is a no-op, so single-device smoke
+tests never notice. A dim is only sharded when the axis size divides it.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+LAYOUTS = ("2d", "dp", "2d_seq")
+
+
+def _current():
+    return getattr(_STATE, "mesh", None), getattr(_STATE, "layout", "2d")
+
+
+@contextlib.contextmanager
+def annotation_mesh(mesh, layout: str = "2d"):
+    assert layout in LAYOUTS, layout
+    prev = (getattr(_STATE, "mesh", None), getattr(_STATE, "layout", "2d"))
+    _STATE.mesh, _STATE.layout = mesh, layout
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.layout = prev
+
+
+def _resolve(mesh, layout: str, logical: str | None):
+    names = mesh.axis_names
+    if logical is None:
+        return None
+    if logical == "dp":
+        if layout == "dp":
+            return tuple(a for a in names if a in ("pod", "data", "model"))
+        return tuple(a for a in names if a in ("pod", "data"))
+    if logical == "tp":
+        if layout == "dp":
+            return None
+        return "model" if "model" in names else None
+    if logical == "sp":
+        if layout == "2d_seq" and "model" in names:
+            return "model"
+        return None
+    raise ValueError(logical)
+
+
+def annotate(x: jax.Array, *logical_spec) -> jax.Array:
+    """with_sharding_constraint with logical axes + divisibility fallback."""
+    mesh, layout = _current()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, logical in zip(x.shape, logical_spec):
+        axes = _resolve(mesh, layout, logical)
+        if axes is None:
+            spec.append(None)
+            continue
+        size = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            size *= mesh.shape[a]
+        spec.append(axes if dim % size == 0 else None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def current_layout() -> str:
+    return _current()[1]

@@ -1,0 +1,181 @@
+"""Sharding rules: FSDP ("data", + "pod" when present) × TP ("model").
+
+Explicit input shardings in JAX must divide the dims, so every rule is
+divisibility-aware: a dim is sharded on its candidate axis only when the
+axis size divides it, otherwise the next candidate (or replication) is used.
+Leading stacked-layer dims (the scan axes) are never sharded.
+
+Scheme (params):
+  column-parallel (wq/wk/wv/wi/wg/in_proj):  (fsdp, tp)
+  row-parallel    (wo/out_proj):             (tp, fsdp)
+  embed (V, D): (tp, fsdp)   unembed (D, V): (fsdp, tp)
+  MoE (E, D, F): experts on tp when E % tp == 0 (qwen3: 128/16), else the
+  expert-FFN dim on tp (grok: 8 experts, F=32768/16) with D on fsdp.
+
+Batch: leading batch dim on (pod, data). Decode caches: batch on dp when it
+divides, else the *sequence* dim on dp (context parallelism — the long_500k
+path); KV heads on tp with head-dim fallback (GQA with 1–4 KV heads).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def mesh_axes(mesh: Mesh, layout: str = "2d") -> tuple:
+    """Returns (dp_axes, tp_axis). layout="dp" folds the model axis into
+    the batch axis (pure data parallelism of activations)."""
+    names = mesh.axis_names
+    if layout == "dp":
+        return tuple(a for a in names
+                     if a in ("pod", "data", "model")), "model"
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    return dp, "model"
+
+
+def _pick(mesh: Mesh, dim: int, candidates) -> object:
+    """First candidate axis (or axis tuple) that divides ``dim``; else None."""
+    for cand in candidates:
+        if cand is None:
+            return None
+        if dim % _axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def _spec_for_param(mesh: Mesh, path: str, shape: tuple) -> P:
+    dp, tp = mesh_axes(mesh)
+    ndim = len(shape)
+    leaf = path.split("/")[-1]
+    in_moe = "/moe/" in path or path.endswith("moe")
+
+    def lead(n_rule: int):
+        return [None] * (ndim - n_rule)
+
+    if ndim == 0 or leaf in ("scale", "conv_b", "A_log", "dt_bias", "D",
+                             "gate_norm", "step"):
+        return P()
+    if leaf == "embed":
+        return P(_pick(mesh, shape[0], [tp]), _pick(mesh, shape[1], [dp]))
+    if leaf == "unembed":
+        return P(_pick(mesh, shape[0], [dp]), _pick(mesh, shape[1], [tp]))
+    if in_moe and leaf in ("wi", "wg", "wo") and ndim >= 3:
+        e, d1, d2 = shape[-3:]
+        if e % _axis_size(mesh, tp) == 0:
+            spec = [tp, _pick(mesh, d1, [dp]), None]
+        elif leaf == "wo":   # (E, F, D): F row-parallel
+            spec = [None, _pick(mesh, d1, [tp]), _pick(mesh, d2, [dp])]
+        else:                # (E, D, F): F column-parallel
+            spec = [None, _pick(mesh, d1, [dp]), _pick(mesh, d2, [tp])]
+        return P(*lead(3), *spec)
+    if leaf in ("wq", "wk", "wv", "wi", "wg", "in_proj") and ndim >= 2:
+        d_in, d_out = shape[-2:]
+        return P(*lead(2), _pick(mesh, d_in, [dp]), _pick(mesh, d_out, [tp]))
+    if leaf in ("wo", "out_proj") and ndim >= 2:
+        d_in, d_out = shape[-2:]
+        return P(*lead(2), _pick(mesh, d_in, [tp]), _pick(mesh, d_out, [dp]))
+    if leaf == "router" and ndim >= 2:
+        return P(*lead(2), _pick(mesh, shape[-2], [dp]), None)
+    if leaf == "conv_w" and ndim >= 2:
+        return P(*lead(2), None, _pick(mesh, shape[-1], [tp]))
+    # default: replicate (small/unknown leaves)
+    return P(*[None] * ndim)
+
+
+def _tree_paths(tree):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        yield key, leaf
+
+
+def param_shardings(mesh: Mesh, params):
+    """NamedSharding pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    def one(path, leaf):
+        return NamedSharding(mesh, _spec_for_param(mesh, path, leaf.shape))
+    flat = [(p, one(p, l)) for p, l in _tree_paths(params)]
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, [s for _, s in flat])
+
+
+def opt_state_shardings(mesh: Mesh, opt_state):
+    """mu/nu mirror the param layout; step is replicated."""
+    return param_shardings(mesh, opt_state)
+
+
+def batch_shardings(mesh: Mesh, batch, layout: str = "2d"):
+    dp, tp = mesh_axes(mesh, layout)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if not shape:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        spec[0] = _pick(mesh, shape[0], [dp, tuple(dp[1:]) or None])
+        if path.endswith("audio_embeds") or path.endswith("patch_embeds"):
+            pass  # (B, T, D) — batch only
+        return NamedSharding(mesh, P(*spec))
+
+    flat = [(p, one(p, l)) for p, l in _tree_paths(batch)]
+    treedef = jax.tree_util.tree_structure(batch)
+    return jax.tree_util.tree_unflatten(treedef, [s for _, s in flat])
+
+
+def cache_shardings(mesh: Mesh, cache, batch_size: int,
+                    layout: str = "2d"):
+    """Decode-cache layout. KV caches (L, B, S, Hkv, Dh): B on dp when it
+    divides; otherwise S on dp (context parallelism, the batch=1 long-context
+    case). Hkv on tp with Dh fallback. SSM states (L, B, H, N, P): heads on
+    tp with state/head-dim fallbacks."""
+    dp, tp = mesh_axes(mesh, layout)
+    dp_size = _axis_size(mesh, dp)
+    batch_on_dp = batch_size % dp_size == 0
+
+    def one(path, leaf):
+        shape = leaf.shape
+        leafname = path.split("/")[-1]
+        spec = [None] * len(shape)
+        if leafname in ("k", "v", "xk", "xv") and len(shape) == 5:
+            # (L, B, S, Hkv, Dh)
+            if batch_on_dp:
+                spec[1] = dp
+            else:
+                spec[2] = _pick(mesh, shape[2], [dp])
+            spec[3] = _pick(mesh, shape[3], [tp])
+            if spec[3] is None:
+                spec[4] = _pick(mesh, shape[4], [tp])
+        elif leafname == "ssm":
+            # (..., B, H, N, P)
+            b_ax = len(shape) - 4
+            if batch_on_dp:
+                spec[b_ax] = dp
+            spec[b_ax + 1] = _pick(mesh, shape[b_ax + 1], [tp])
+            if spec[b_ax + 1] is None:
+                spec[b_ax + 2] = _pick(mesh, shape[b_ax + 2], [tp])
+        elif leafname == "conv":
+            # (..., B, K-1, C)
+            b_ax = len(shape) - 3
+            if batch_on_dp:
+                spec[b_ax] = dp
+            spec[-1] = _pick(mesh, shape[-1], [tp])
+        return NamedSharding(mesh, P(*spec))
+
+    flat = [(p, one(p, l)) for p, l in _tree_paths(cache)]
+    treedef = jax.tree_util.tree_structure(cache)
+    return jax.tree_util.tree_unflatten(treedef, [s for _, s in flat])
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

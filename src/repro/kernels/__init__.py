@@ -1,0 +1,27 @@
+"""Pallas TPU kernels with tunable BlockSpec tilings.
+
+Four benchmark-hub kernels (the paper's applications: dedispersion,
+convolution, hotspot, GEMM) plus the framework's own hot spots (flash
+attention, Mamba2 SSD). Each module provides: the ``pl.pallas_call`` kernel,
+a jit'd wrapper, a pure-jnp oracle (``*_ref``), a tunable ``space()`` and an
+analytic ``workload()`` for the cost model.
+"""
+from __future__ import annotations
+
+from . import (convolution, dedispersion, flash_attention, gemm, hotspot,
+               ssd)
+
+# registry used by the hub builder and the autotune layer
+HUB_KERNELS = {
+    "dedispersion": dedispersion,
+    "convolution": convolution,
+    "hotspot": hotspot,
+    "gemm": gemm,
+}
+
+FRAMEWORK_KERNELS = {
+    "flash_attention": flash_attention,
+    "ssd": ssd,
+}
+
+ALL_KERNELS = {**HUB_KERNELS, **FRAMEWORK_KERNELS}

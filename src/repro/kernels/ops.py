@@ -1,0 +1,23 @@
+"""Public jit'd entry points for every Pallas kernel (the ops facade).
+
+Each op takes the tunable tile parameters as keyword arguments with the
+framework defaults; pass ``interpret=True`` to execute on CPU (used by the
+test suite, which sweeps shapes/dtypes against the ``ref`` oracles).
+"""
+from __future__ import annotations
+
+from .convolution import conv2d, conv2d_ref
+from .dedispersion import dedisperse, dedisperse_ref, make_delays
+from .flash_attention import attention_ref, flash_attention
+from .gemm import gemm, gemm_ref
+from .hotspot import hotspot, hotspot_ref
+from .ssd import ssd_ref, ssd_scan
+
+__all__ = [
+    "conv2d", "conv2d_ref",
+    "dedisperse", "dedisperse_ref", "make_delays",
+    "flash_attention", "attention_ref",
+    "gemm", "gemm_ref",
+    "hotspot", "hotspot_ref",
+    "ssd_scan", "ssd_ref",
+]

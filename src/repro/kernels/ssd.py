@@ -1,0 +1,176 @@
+"""Mamba2 SSD (state-space duality) chunked scan — TPU Pallas kernel.
+
+The attention-free hot spot for mamba2/zamba2. Implements the SSD chunked
+algorithm (Dao & Gu, arXiv:2405.21060) for one head group:
+
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t          (state update)
+    y_t = C_t · h_t                                          (readout)
+
+Chunked over the sequence: within a chunk of Q steps the output splits into
+an *intra-chunk* quadratic term ((C Bᵀ) ∘ decay-mask) X — two MXU matmuls —
+and an *inter-chunk* term C · (decay · h_in); the carried state is updated
+with a third matmul. The chunk loop is the innermost ("arbitrary") grid dim
+with the state in VMEM scratch — the TPU-native replacement for the paper's
+GPU warp-level scan.
+
+Tunables: chunk length Q, state block, accumulate dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.costmodel import KernelWorkload, alignment_eff
+from ..core.devices import DeviceModel
+from ..core.searchspace import SearchSpace
+from ..core.tunable import Constraint, tunables_from_dict
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)     # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)   # (Q,)
+    a = a_ref[0]                          # scalar A (negative)
+    b = b_ref[0].astype(jnp.float32)     # (Q, N)
+    c = c_ref[0].astype(jnp.float32)     # (Q, N)
+
+    log_decay = dt * a                    # (Q,) log per-step decay
+    cum = jnp.cumsum(log_decay)           # (Q,) cumulative within chunk
+    # intra-chunk: mask[i,j] = exp(cum_i - cum_j) for j <= i (strict decay
+    # between step j and i), scaled by dt_j
+    li = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = iota_i >= iota_j
+    decay_ij = jnp.where(mask, jnp.exp(li), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    w = cb * decay_ij * dt[None, :]
+    y_intra = jax.lax.dot(w, x, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_inter_i = exp(cum_i) * C_i · h_in
+    h_in = h_ref[...]                     # (N, P)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot(
+        c, h_in, preferred_element_type=jnp.float32)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h_out = exp(total) * h_in + Σ_j exp(total - cum_j)·dt_j·B_j⊗X_j
+    total = cum[-1]
+    suffix = jnp.exp(total - cum) * dt    # (Q,)
+    bx = jax.lax.dot_general(b * suffix[:, None], x, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    h_ref[...] = jnp.exp(total) * h_in + bx
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """SSD scan for flattened (batch·heads) leading dim.
+
+    x: (BH, L, P); dt: (BH, L); a: (BH,); b/c: (BH, L, N). Returns y like x.
+    """
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0
+    n_chunks = l // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk), lambda h, i: (h, i)),
+            pl.BlockSpec((1,), lambda h, i: (h,)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, a, b, c)
+
+
+# -------------------------------------------------------------------- ref
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array, **_unused) -> jax.Array:
+    """Sequential oracle: literal recurrence, step by step."""
+    bh, l, p = x.shape
+    n = b.shape[-1]
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs  # (BH,P), (BH,), (BH,N), (BH,N)
+        decay = jnp.exp(dt_t * a)     # (BH,)
+        h = (decay[:, None, None] * h
+             + dt_t[:, None, None] * b_t[:, :, None] * x_t[:, None, :])
+        y_t = jnp.einsum("bnp,bn->bp", h, c_t)
+        return h, y_t
+
+    h0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32),
+          c.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype)
+
+
+# ------------------------------------------------------------ search space
+def space(seq: int = 4096) -> SearchSpace:
+    tunables = tunables_from_dict({
+        "chunk": (32, 64, 128, 256, 512),
+        "acc_dtype": ("f32", "bf16"),
+        "state_block": (32, 64, 128),
+    })
+    constraints = (
+        Constraint(lambda c: seq % c["chunk"] == 0, "chunk divides L"),
+        Constraint(lambda c: c["state_block"] <= 128, "state fits a tile"),
+    )
+    return SearchSpace(tunables, constraints, name="ssd")
+
+
+def workload(bh: int = 24 * 8, seq: int = 4096, p: int = 64,
+             n: int = 128) -> KernelWorkload:
+    def flops(c: Mapping) -> float:
+        q = c["chunk"]
+        per_chunk = 2 * q * q * n + 2 * q * q * p + 4 * q * n * p
+        return bh * (seq // q) * per_chunk
+
+    def hbm_bytes(c: Mapping, dev: DeviceModel) -> float:
+        return bh * seq * (p + 2 * n + 1) * 2 * 2  # in+out streams, bf16
+
+    def vmem_bytes(c: Mapping) -> float:
+        q = c["chunk"]
+        acc = 4 if c["acc_dtype"] == "f32" else 2
+        return (2 * (q * p + 2 * q * n + q) * 2 + q * q * acc + n * p * 4
+                + q * p * acc)
+
+    def grid_size(c: Mapping) -> float:
+        return bh * (seq // c["chunk"])
+
+    def compute_eff(c: Mapping, dev: DeviceModel) -> float:
+        q = c["chunk"]
+        eff = alignment_eff(q, dev.mxu) * alignment_eff(n, dev.lane)
+        eff *= min(1.0, q / dev.mxu) ** 0.5
+        if c["acc_dtype"] == "bf16":
+            eff *= 0.93
+        eff *= {32: 0.9, 64: 1.0, 128: 1.0}[c["state_block"]]
+        return 0.7 * eff  # cumsum/exp VPU work between matmuls
+
+    return KernelWorkload("ssd", flops, hbm_bytes, vmem_bytes, grid_size,
+                          compute_eff)

@@ -1,0 +1,221 @@
+"""GQA attention: flash (memory-linear, custom-VJP) training path + decode.
+
+``blockwise_attention`` is the FlashAttention algorithm in plain JAX: a
+``lax.scan`` over KV blocks with online-softmax carry, wrapped in a
+``jax.custom_vjp`` whose backward recomputes per-block probabilities from
+the saved (out, lse) statistics — the standard flash backward. Without the
+custom VJP, scan AD would stash every block's probability matrix
+(O(S²) fp32, and GSPMD replicates those residual stacks); with it, the
+residuals are q/k/v/out/lse — linear in S. On TPU the Pallas kernel
+(kernels/flash_attention.py) is the fused drop-in; this is the portable
+oracle and the dry-run path.
+
+Sliding-window and global layers differ only in the mask, so a stack mixing
+both (gemma3 5:1) stays one homogeneous scan: ``is_global`` is a traced
+per-layer flag (passed as a float 0/1 so the custom VJP can treat it as a
+regular operand).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def _mask_for(q_pos, kv_pos, *, causal: bool, window, is_global):
+    """(Sq, Skv) boolean mask from absolute positions (is_global: 0/1 fp)."""
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        win_ok = (q_pos[:, None] - kv_pos[None, :]) < window
+        if is_global is None:
+            m &= win_ok
+        else:
+            m &= win_ok | (is_global > 0.5)
+    return m
+
+
+def _split_blocks(k, block: int):
+    b, skv, hkv, d = k.shape
+    n_blocks = -(-skv // block)
+    pad = n_blocks * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return (k.reshape(b, n_blocks, block, hkv, d).transpose(1, 0, 2, 3, 4),
+            n_blocks, pad)
+
+
+def _flash_fwd_scan(q, k, v, is_global, *, causal, window, q_offset,
+                    block_kv):
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scale = d ** -0.5
+    block = min(block_kv, skv)
+    kb, n_blocks, pad = _split_blocks(k, block)
+    vb, _, _ = _split_blocks(v, block)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, bi = inputs
+        kv_pos = bi * block + jnp.arange(block)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_for(q_pos, kv_pos, causal=causal, window=window,
+                         is_global=is_global)
+        if pad:
+            mask &= (kv_pos < skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                  (kb, vb, jnp.arange(n_blocks)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None])
+    lse = m + jnp.log(l_safe)                       # (b, hkv, g, sq)
+    out_q = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    return out_q, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, is_global, causal, window, q_offset, block_kv):
+    out, _ = _flash_fwd_scan(q, k, v, is_global, causal=causal,
+                             window=window, q_offset=q_offset,
+                             block_kv=block_kv)
+    return out
+
+
+def _flash_fwd(q, k, v, is_global, causal, window, q_offset, block_kv):
+    out, lse = _flash_fwd_scan(q, k, v, is_global, causal=causal,
+                               window=window, q_offset=q_offset,
+                               block_kv=block_kv)
+    return out, (q, k, v, is_global, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, block_kv, res, dout):
+    q, k, v, is_global, out, lse = res
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, g, d)
+    dog = dout.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)  # b,k,g,q,d
+    og = out.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    # D_i = Σ_d dout·out (flash backward trick)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), -1)
+    block = min(block_kv, skv)
+    kb, n_blocks, pad = _split_blocks(k, block)
+    vb, _, _ = _split_blocks(v, block)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(dq_acc, inputs):
+        kblk, vblk, bi = inputs
+        kv_pos = bi * block + jnp.arange(block)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_for(q_pos, kv_pos, causal=causal, window=window,
+                         is_global=is_global)
+        if pad:
+            mask &= (kv_pos < skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                      # (b,k,g,q,s)
+        dv_blk = jnp.einsum("bkgqs,bkgqd->bskd", p,
+                            dog.astype(jnp.float32))
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", dog, vblk,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_blk = jnp.einsum("bkgqs,bskd->bqkgd", ds, kblk,
+                            preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qg,
+                            preferred_element_type=jnp.float32)
+        return dq_acc + dq_blk, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, sq, hkv, g, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(n_blocks)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, n_blocks * block, hkv, d)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, n_blocks * block, hkv, d)
+    if pad:
+        dk = dk[:, :skv]
+        dv = dv[:, :skv]
+    dq = dq.reshape(b, sq, h, d).astype(q.dtype)
+    return (dq, dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(is_global))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        is_global=None, q_offset: int = 0,
+                        block_kv: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D). Returns (B, Sq, H, D)."""
+    isg = (jnp.float32(-1.0) if is_global is None
+           else jnp.asarray(is_global, jnp.float32))
+    return _flash(q, k, v, isg, causal, window, q_offset, block_kv)
+
+
+def attention_reference(q, k, v, *, causal=True, window=None, is_global=None,
+                        q_offset: int = 0) -> jax.Array:
+    """Materialized-S² oracle (tests only)."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    kf = jnp.repeat(k, g, axis=2)
+    vf = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * d ** -0.5
+    q_pos = q_offset + jnp.arange(sq)
+    isg = None if is_global is None else jnp.asarray(is_global, jnp.float32)
+    mask = _mask_for(q_pos, jnp.arange(skv), causal=causal, window=window,
+                     is_global=isg)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, *, window: int | None = None,
+                     is_global=None) -> jax.Array:
+    """Single-step attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, S_max, Hkv, D); cache_len: (B,) or scalar —
+    number of valid cache entries *including* the current token.
+    """
+    b, _, h, d = q.shape
+    _, smax, hkv, _ = k_cache.shape
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    kv_pos = jnp.arange(smax)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    valid = kv_pos[None, :] < cl[:, None]                    # causal+len
+    if window is not None:
+        win_ok = (cl[:, None] - 1 - kv_pos[None, :]) < window
+        if is_global is None:
+            valid &= win_ok
+        else:
+            valid &= win_ok | jnp.asarray(is_global > 0.5)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

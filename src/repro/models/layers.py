@@ -1,0 +1,99 @@
+"""Shared model layers: norms, RoPE (incl. M-RoPE), initializers.
+
+Pure-JAX (no flax): parameters are nested dicts of arrays; apply functions
+are stateless. Compute dtype is bf16, norms/softmax accumulate in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+EPS = 1e-6
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + EPS) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm_np(x: jax.Array) -> jax.Array:
+    """Non-parametric LayerNorm (OLMo): no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + EPS)).astype(x.dtype)
+
+
+def make_norm(cfg: ArchConfig, key, d: int) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {}  # layernorm_np has no parameters
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm_np(x)
+
+
+# -------------------------------------------------------------------- rope
+def rope_angles(cfg: ArchConfig, positions: jax.Array) -> jax.Array:
+    """positions: (..., ) int32 -> angles (..., d_head//2) fp32.
+
+    M-RoPE (qwen2-vl): positions (..., 3) with (t, h, w) components; the
+    half-dim frequency slots are split into three sections.
+    """
+    half = cfg.d_head // 2
+    inv_freq = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if cfg.m_rope:
+        # section split (t, h, w) ≈ (¼, ⅜, ⅜) of the half-dims (qwen2-vl uses
+        # [16, 24, 24] for half=64)
+        s1 = half // 4
+        s2 = s1 + (half - s1) // 2
+        sec = jnp.concatenate([jnp.zeros((s1,), jnp.int32),
+                               jnp.ones((s2 - s1,), jnp.int32),
+                               jnp.full((half - s2,), 2, jnp.int32)])
+        pos = jnp.take_along_axis(
+            positions[..., None, :].astype(jnp.float32),
+            sec[(None,) * (positions.ndim - 1)][..., None], axis=-1)[..., 0]
+        return pos * inv_freq  # (..., half)
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); angles: (B, S, D//2). Rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# -------------------------------------------------------------------- init
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> jax.Array:
+    s = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s)
+
+
+def embed_init(key, vocab: int, d: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+def activation(cfg: ArchConfig, gate: jax.Array | None, up: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if cfg.act == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    return jax.nn.gelu(up, approximate=True)  # plain gelu MLP
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x

@@ -1,0 +1,195 @@
+"""Mamba2 (SSD) block: chunked training path + O(1)-state decode path.
+
+Training uses the chunked state-space-dual algorithm (same math as
+kernels/ssd.py, which is the fused TPU version): a ``lax.scan`` over
+sequence chunks carrying the (B, H, N, P) state, with two MXU-shaped matmuls
+per chunk. Decode carries (conv_state, ssm_state) and costs O(N·P) per token
+— the reason SSM/hybrid archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distribution.annotate import annotate
+from .layers import dense_init, rmsnorm
+
+
+def dims(cfg: ArchConfig) -> tuple:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads
+    hd = d_in // nh
+    n = cfg.ssm_state
+    return d_in, nh, hd, n
+
+
+def make_mamba(cfg: ArchConfig, key) -> dict:
+    d = cfg.d_model
+    d_in, nh, hd, n = dims(cfg)
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        # projects to [z (d_in), xBC (d_in + 2n), dt (nh)]
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * n + nh),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, d),
+    }
+
+
+def _split(cfg: ArchConfig, proj: jax.Array) -> tuple:
+    d_in, nh, hd, n = dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width K: x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(k))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _ssd_chunked(x, dt, a, bmat, cmat, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) negative; b/c: (B, S, N).
+    Returns (y, h_final) with y like x, h (B, H, N, P) fp32.
+    """
+    bsz, s, nh, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, "sequence must be chunk-padded"
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, nh, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, chunk, nh).transpose(1, 0, 2, 3)
+    bc = bmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    iot = jnp.arange(chunk)
+    tri = iot[:, None] >= iot[None, :]
+
+    def body(h, inp):
+        xq, dtq, bq, cq = inp           # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        dtf = dtq.astype(jnp.float32)
+        log_decay = dtf * a             # (B,Q,H)
+        cum = jnp.cumsum(log_decay, axis=1)
+        # intra-chunk: ((C Bᵀ) ∘ decay-mask) X, per head. The upper triangle
+        # would be exp(positive)→inf; clamp BEFORE exp (the where alone
+        # still propagates inf×0=NaN through the backward pass).
+        li = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,H)
+        li = jnp.where(tri[None, :, :, None], li, -1e30)
+        decay = jnp.exp(li)
+        cb = jnp.einsum("bqn,bsn->bqs", cq.astype(jnp.float32),
+                        bq.astype(jnp.float32))               # (B,Q,Q)
+        w = cb[:, :, :, None] * decay * dtf[:, None, :, :]    # (B,Q,S,H)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", w, xq.astype(jnp.float32))
+        # inter-chunk readout from carried state
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "bqn,bhnp->bqhp", cq.astype(jnp.float32), h)
+        # state update
+        total = cum[:, -1, :]                                  # (B,H)
+        suffix = jnp.exp(total[:, None, :] - cum) * dtf        # (B,Q,H)
+        bx = jnp.einsum("bqn,bqh,bqhp->bhnp", bq.astype(jnp.float32),
+                        suffix, xq.astype(jnp.float32))
+        h = jnp.exp(total)[:, :, None, None] * h + bx
+        return h, (y_intra + y_inter).astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, n, p), jnp.float32)
+    # checkpoint the chunk body: scan AD would otherwise stash the (Q,Q)
+    # decay/weight matrices of every chunk (quadratic-in-S fp32 residuals);
+    # with the checkpoint only the carried state per chunk is saved.
+    h, yc = jax.lax.scan(jax.checkpoint(body), h0, (xc, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, s, nh, p)
+    return y, h
+
+
+def apply_mamba(cfg: ArchConfig, p: dict, x: jax.Array,
+                return_cache: bool = False):
+    """Full-sequence (training/prefill) path. x: (B, S, D).
+
+    With ``return_cache`` also returns (conv_state, ssm_state) for decode
+    continuation: the last (conv_width-1) raw xBC inputs and the final SSD
+    state."""
+    d_in, nh, hd, n = dims(cfg)
+    dt_ = x.dtype
+    proj = annotate(x @ p["in_proj"].astype(dt_), "dp", None, "tp")
+    z, xbc, dt_raw = _split(cfg, proj)
+    xbc_raw = xbc
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_in]
+    bmat = xbc[..., d_in:d_in + n]
+    cmat = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(p["A_log"])
+    bsz, s, _ = x.shape
+    # pad sequence to chunk multiple
+    chunk = cfg.ssm_chunk
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    xh = xs.reshape(bsz, s + pad, nh, hd)
+    y, h_final = _ssd_chunked(xh, dt, a, bmat, cmat, chunk)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh  # skip connection
+    y = y.reshape(bsz, s + pad, d_in)[:, :s]
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])            # gated norm
+    out = y @ p["out_proj"].astype(dt_)
+    if not return_cache:
+        return out, None
+    cw = cfg.conv_width
+    conv_state = xbc_raw[:, s - (cw - 1):s].astype(jnp.bfloat16)
+    return out, (conv_state, h_final)
+
+
+# -------------------------------------------------------------------- decode
+def init_mamba_cache(cfg: ArchConfig, batch: int) -> dict:
+    d_in, nh, hd, n = dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, nh, n, hd), jnp.float32),
+    }
+
+
+def decode_mamba(cfg: ArchConfig, p: dict, cache: dict, x: jax.Array) -> tuple:
+    """Single-token step. x: (B, 1, D) -> (y, new_cache)."""
+    d_in, nh, hd, n = dims(cfg)
+    dt_ = x.dtype
+    proj = x[:, 0] @ p["in_proj"].astype(dt_)                  # (B, ...)
+    z, xbc, dt_raw = _split(cfg, proj)
+    # conv update: window = [cache, current]
+    win = jnp.concatenate([cache["conv"],
+                           xbc[:, None, :].astype(jnp.bfloat16)], axis=1)
+    w = p["conv_w"].astype(dt_)
+    conv_out = jax.nn.silu((win.astype(dt_) * w[None]).sum(axis=1)
+                           + p["conv_b"].astype(dt_))
+    xs = conv_out[..., :d_in]
+    bvec = conv_out[..., d_in:d_in + n].astype(jnp.float32)
+    cvec = conv_out[..., d_in + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    xh = xs.reshape(-1, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * a)                                    # (B,H)
+    h = (decay[:, :, None, None] * cache["ssm"]
+         + dt[:, :, None, None] * bvec[:, None, :, None] * xh[:, :, None, :])
+    y = jnp.einsum("bhnp,bn->bhp", h, cvec) + p["D"][None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    new_cache = {"conv": win[:, 1:], "ssm": h}
+    return out, new_cache

@@ -1,0 +1,498 @@
+"""Model composition for all assigned families.
+
+Families and their layer stacks (all scanned with stacked params):
+
+  dense / vlm   [attn + mlp] × L            (gemma3: per-layer is_global flag
+                                             switches the mask, not the code)
+  moe           [attn + moe] × L
+  ssm           [mamba2] × L
+  hybrid        ([mamba2] × k + shared attn block) × groups + tail
+                (zamba2: one shared transformer block reused at every site)
+  audio         whisper enc-dec: encoder [bi-attn + mlp] × Le over stub audio
+                embeddings; decoder [self-attn + cross-attn + mlp] × Ld
+
+Entry points:
+  ``init_params``                      parameter pytree (fp32 masters)
+  ``forward``                          teacher-forced logits (training)
+  ``init_cache`` / ``prefill`` / ``decode_step``   serving; caches are
+      stacked per-layer pytrees scanned together with the layer params, so
+      the decode HLO stays one compact loop at any depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distribution.annotate import annotate
+from .attention import blockwise_attention, decode_attention
+from .layers import (COMPUTE_DTYPE, apply_norm, apply_rope, dense_init,
+                     embed_init, make_norm, rope_angles, softcap)
+from .mamba2 import (apply_mamba, decode_mamba, dims as mamba_dims,
+                     init_mamba_cache, make_mamba)
+from .mlp import apply_mlp, apply_moe, make_mlp, make_moe
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+# ----------------------------------------------------------------- attention
+def make_attention(cfg: ArchConfig, key) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * dh),
+        "wk": dense_init(ks[1], d, hkv * dh),
+        "wv": dense_init(ks[2], d, hkv * dh),
+        "wo": dense_init(ks[3], h * dh, d, scale=(h * dh) ** -0.5),
+    }
+
+
+def _project_qkv(cfg: ArchConfig, p: dict, x, kv_src=None):
+    b, s, _ = x.shape
+    kv = x if kv_src is None else kv_src
+    skv = kv.shape[1]
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (kv @ p["wk"].astype(dt)).reshape(b, skv, cfg.n_kv_heads, cfg.d_head)
+    v = (kv @ p["wv"].astype(dt)).reshape(b, skv, cfg.n_kv_heads, cfg.d_head)
+    q = annotate(q, "dp", None, "tp", None)
+    k = annotate(k, "dp", None, "tp", None)
+    v = annotate(v, "dp", None, "tp", None)
+    return q, k, v
+
+
+def apply_attention(cfg: ArchConfig, p: dict, x, positions, *, causal=True,
+                    window=None, is_global=None, rope=True, kv_src=None,
+                    kv_positions=None, block_kv=1024):
+    """Full-sequence attention. x: (B,S,D); positions: (B,S[,3])."""
+    q, k, v = _project_qkv(cfg, p, x, kv_src)
+    if rope:
+        ang_q = rope_angles(cfg, positions)
+        ang_k = ang_q if kv_src is None else rope_angles(cfg, kv_positions)
+        q = apply_rope(q, ang_q)
+        k = apply_rope(k, ang_k)
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              is_global=is_global, block_kv=block_kv)
+    b, s, _, _ = q.shape
+    return (out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)), (k, v)
+
+
+def apply_attention_decode(cfg: ArchConfig, p: dict, x, cache_k, cache_v,
+                           cache_len, *, window=None, is_global=None,
+                           rope=True, cross=False):
+    """Single-step attention. x: (B,1,D); caches (B,Smax,Hkv,Dh).
+
+    Self-attention writes the current token's K/V at index cache_len;
+    cross-attention reads the (static) encoder projection cache.
+    """
+    q, k, v = _project_qkv(cfg, p, x)
+    b = x.shape[0]
+    if rope:
+        pos = jnp.broadcast_to(jnp.asarray(cache_len), (b,))[:, None]
+        if cfg.m_rope:
+            pos = jnp.repeat(pos[..., None], 3, axis=-1)
+        ang = rope_angles(cfg, pos)
+        q = apply_rope(q, ang)
+        if not cross:
+            k = apply_rope(k, ang)
+    if cross:
+        new_k, new_v = cache_k, cache_v
+        total_len = cache_k.shape[1]  # full encoder output is valid
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+        new_k = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (i, 0, 0)))(cache_k, k, idx)
+        new_v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (i, 0, 0)))(cache_v, v, idx)
+        total_len = idx + 1
+    out = decode_attention(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
+                           total_len, window=window, is_global=is_global)
+    return (out.reshape(b, 1, -1) @ p["wo"].astype(x.dtype)), new_k, new_v
+
+
+# -------------------------------------------------------------- layer bodies
+def make_block(cfg: ArchConfig, key, kind: str) -> dict:
+    """kind: dense | moe | mamba | encdec (decoder w/ cross-attn) | bidi."""
+    ks = jax.random.split(key, 6)
+    if kind == "mamba":
+        return {"norm": make_norm(cfg, ks[0], cfg.d_model),
+                "mamba": make_mamba(cfg, ks[1])}
+    p = {"norm1": make_norm(cfg, ks[0], cfg.d_model),
+         "attn": make_attention(cfg, ks[1]),
+         "norm2": make_norm(cfg, ks[2], cfg.d_model)}
+    if kind == "moe":
+        p["moe"] = make_moe(cfg, ks[3])
+    else:
+        p["mlp"] = make_mlp(cfg, ks[3], cfg.d_model, cfg.d_ff)
+    if kind == "encdec":
+        p["norm_x"] = make_norm(cfg, ks[4], cfg.d_model)
+        p["xattn"] = make_attention(cfg, ks[5])
+    return p
+
+
+def _apply_ffn(cfg: ArchConfig, p: dict, x):
+    z = apply_norm(cfg, p["norm2"], x)
+    if "moe" in p:
+        return x + apply_moe(cfg, p["moe"], z)
+    return x + apply_mlp(cfg, p["mlp"], z)
+
+
+def apply_block(cfg: ArchConfig, p: dict, x, positions, *, is_global=None,
+                causal=True, enc_out=None, enc_positions=None,
+                collect=False):
+    """One block, full-sequence. Returns (x, kv_or_None)."""
+    x = annotate(x, "dp", "sp", None)
+    if "mamba" in p:
+        h, mcache = apply_mamba(cfg, p["mamba"],
+                                apply_norm(cfg, p["norm"], x),
+                                return_cache=collect)
+        return x + h, mcache
+    h, (k, v) = apply_attention(cfg, p["attn"],
+                                apply_norm(cfg, p["norm1"], x), positions,
+                                causal=causal, window=cfg.window,
+                                is_global=is_global)
+    x = x + h
+    if "xattn" in p:
+        h, _ = apply_attention(cfg, p["xattn"],
+                               apply_norm(cfg, p["norm_x"], x), positions,
+                               causal=False, rope=False, kv_src=enc_out,
+                               kv_positions=enc_positions)
+        x = x + h
+    x = _apply_ffn(cfg, p, x)
+    return x, ((k.astype(CACHE_DTYPE), v.astype(CACHE_DTYPE))
+               if collect else None)
+
+
+# -------------------------------------------------------------------- init
+def _stack(cfg: ArchConfig, key, n: int, kind: str) -> dict:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: make_block(cfg, k, kind))(keys)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+                    "final_norm": make_norm(cfg, ks[1], cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[2], cfg.d_model, cfg.vocab)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["layers"] = _stack(cfg, ks[3], cfg.n_layers, "dense")
+    elif fam == "moe":
+        params["layers"] = _stack(cfg, ks[3], cfg.n_layers, "moe")
+    elif fam == "ssm":
+        params["layers"] = _stack(cfg, ks[3], cfg.n_layers, "mamba")
+    elif fam == "hybrid":
+        k_g, k_t, k_s = jax.random.split(ks[3], 3)
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        tail = cfg.n_layers - n_groups * every
+        gkeys = jax.random.split(k_g, n_groups)
+        params["mamba_groups"] = jax.vmap(
+            lambda k: _stack(cfg, k, every, "mamba"))(gkeys)
+        if tail:
+            params["mamba_tail"] = _stack(cfg, k_t, tail, "mamba")
+        params["shared"] = make_block(cfg, k_s, "dense")
+    elif fam == "audio":
+        params["encoder"] = _stack(cfg, ks[3], cfg.n_encoder_layers, "bidi")
+        params["enc_norm"] = make_norm(cfg, ks[5], cfg.d_model)
+        params["layers"] = _stack(cfg, ks[4], cfg.n_layers, "encdec")
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ------------------------------------------------------------------ helpers
+def _embed(cfg: ArchConfig, params: dict, tokens) -> jax.Array:
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    # the vocab-sharded gather can emit a replicated activation; pin it
+    return annotate(x, "dp", None, None)
+
+
+def _unembed(cfg: ArchConfig, params: dict, x) -> jax.Array:
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["unembed"]).astype(x.dtype)
+    logits = x @ w
+    return softcap(logits.astype(jnp.float32), cfg.logits_softcap)
+
+
+def _is_global_flags(cfg: ArchConfig):
+    if cfg.global_every:
+        idx = jnp.arange(cfg.n_layers)
+        return (idx + 1) % cfg.global_every == 0
+    return None
+
+
+def _positions(cfg: ArchConfig, batch: dict, tokens) -> jax.Array:
+    if cfg.m_rope and "positions" in batch:
+        return batch["positions"]
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cfg.m_rope:
+        pos = jnp.repeat(pos[..., None], 3, axis=-1)
+    return pos
+
+
+def _encoder_forward(cfg: ArchConfig, params: dict, audio_embeds) -> jax.Array:
+    x = audio_embeds.astype(COMPUTE_DTYPE)
+    b, t, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+
+    def body(xc, layer_p):
+        xc, _ = apply_block(cfg, layer_p, xc, pos, causal=False)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _maybe_remat(f, remat: str):
+    if remat == "full":
+        return jax.checkpoint(f)
+    if remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return f
+
+
+# ------------------------------------------------------------------ forward
+def forward(cfg: ArchConfig, params: dict, batch: dict, *,
+            remat: str = "none", collect: bool = False,
+            pre_logits: bool = False):
+    """Teacher-forced logits (B, S, V); with ``collect=True`` also returns
+    the serving caches built from this pass (used by prefill).
+    ``pre_logits``: return the final-norm hidden states instead of logits
+    (the training loss computes chunked CE itself)."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        npatch = batch["patch_embeds"].shape[1]
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(x.dtype), x[:, npatch:]], axis=1)
+    positions = _positions(cfg, batch, tokens)
+    enc_out = None
+    enc_pos = None
+    if cfg.family == "audio":
+        enc_out = _encoder_forward(cfg, params, batch["audio_embeds"])
+        b_, t_ = enc_out.shape[:2]
+        enc_pos = jnp.broadcast_to(jnp.arange(t_)[None, :], (b_, t_))
+
+    caches: dict = {}
+    fam = cfg.family
+    if fam == "hybrid":
+        def group_body(xc, group_p):
+            def mamba_body(xi, lp):
+                xi, mc = apply_block(cfg, lp, xi, positions, collect=collect)
+                return xi, mc
+            xc, mcs = jax.lax.scan(_maybe_remat(mamba_body, remat), xc, group_p)
+            xc, kv = apply_block(cfg, params["shared"], xc, positions,
+                                 collect=collect)
+            return xc, (mcs, kv)
+
+        x, (gmc, gkv) = jax.lax.scan(group_body, x, params["mamba_groups"])
+        if "mamba_tail" in params:
+            def tail_body(xc, lp):
+                xc, mc = apply_block(cfg, lp, xc, positions, collect=collect)
+                return xc, mc
+            x, tmc = jax.lax.scan(_maybe_remat(tail_body, remat), x,
+                                  params["mamba_tail"])
+        else:
+            tmc = None
+        if collect:
+            caches = {"groups": gmc, "shared_kv": gkv, "tail": tmc}
+    else:
+        flags = _is_global_flags(cfg)
+
+        def body(xc, inp):
+            if flags is not None:
+                layer_p, is_g = inp
+            else:
+                layer_p, is_g = inp, None
+            xc, kv = apply_block(cfg, layer_p, xc, positions, is_global=is_g,
+                                 enc_out=enc_out, enc_positions=enc_pos,
+                                 collect=collect)
+            return xc, kv
+
+        xs = (params["layers"], flags) if flags is not None else params["layers"]
+        x, kvs = jax.lax.scan(_maybe_remat(body, remat), x, xs)
+        if collect:
+            caches = {"kv": kvs}
+            if fam == "audio":
+                caches["enc_out"] = enc_out
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    if pre_logits:
+        return (x, caches) if collect else x
+    logits = _unembed(cfg, params, x)
+    return (logits, caches) if collect else logits
+
+
+# ====================================================================== serve
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Empty serving cache (stacked per-layer pytrees)."""
+    hkv, dh, L = cfg.n_kv_heads, cfg.d_head, cfg.n_layers
+    kv = lambda n: {"k": jnp.zeros((n, batch, max_len, hkv, dh), CACHE_DTYPE),
+                    "v": jnp.zeros((n, batch, max_len, hkv, dh), CACHE_DTYPE)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return kv(L)
+    if fam == "ssm":
+        mc = init_mamba_cache(cfg, batch)
+        return {"conv": jnp.stack([mc["conv"]] * L),
+                "ssm": jnp.stack([mc["ssm"]] * L)}
+    if fam == "hybrid":
+        every = cfg.shared_attn_every
+        g = L // every
+        tail = L - g * every
+        mc = init_mamba_cache(cfg, batch)
+        out = {
+            "groups": {"conv": jnp.broadcast_to(
+                           mc["conv"], (g, every) + mc["conv"].shape).copy(),
+                       "ssm": jnp.broadcast_to(
+                           mc["ssm"], (g, every) + mc["ssm"].shape).copy()},
+            "shared": kv(g),
+        }
+        if tail:
+            out["tail"] = {"conv": jnp.stack([mc["conv"]] * tail),
+                           "ssm": jnp.stack([mc["ssm"]] * tail)}
+        return out
+    if fam == "audio":
+        out = kv(L)
+        out["xk"] = jnp.zeros((L, batch, cfg.n_audio_frames, hkv, dh),
+                              CACHE_DTYPE)
+        out["xv"] = jnp.zeros_like(out["xk"])
+        return out
+    raise ValueError(fam)
+
+
+def _pad_cache_seq(arr, max_len: int, axis: int):
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, max_len - arr.shape[axis])
+    return jnp.pad(arr, pad)
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int):
+    """Run the full-sequence path, return (last_logits, cache, cache_len)."""
+    logits, c = forward(cfg, params, batch, collect=True)
+    s = batch["tokens"].shape[1]
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "audio"):
+        k, v = c["kv"]
+        cache = {"k": _pad_cache_seq(k, max_len, 2),
+                 "v": _pad_cache_seq(v, max_len, 2)}
+        if fam == "audio":
+            # static cross-attention caches: project encoder output per layer
+            enc = c["enc_out"]
+            def proj(layer_p):
+                _, xk, xv = _project_qkv(cfg, layer_p["xattn"], enc)
+                return xk.astype(CACHE_DTYPE), xv.astype(CACHE_DTYPE)
+            xk, xv = jax.vmap(proj)(params["layers"])
+            cache["xk"], cache["xv"] = xk, xv
+    elif fam == "ssm":
+        # forward() returned the stacked (conv_state, ssm_state) per layer
+        cache = {"conv": c["kv"][0], "ssm": c["kv"][1]}
+    elif fam == "hybrid":
+        gconv, gssm = c["groups"]
+        sk, sv = c["shared_kv"]
+        cache = {"groups": {"conv": gconv, "ssm": gssm},
+                 "shared": {"k": _pad_cache_seq(sk, max_len, 2),
+                            "v": _pad_cache_seq(sv, max_len, 2)}}
+        if c["tail"] is not None:
+            cache["tail"] = {"conv": c["tail"][0], "ssm": c["tail"][1]}
+    else:
+        raise ValueError(fam)
+    return logits[:, -1], cache, jnp.int32(s)
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens,
+                cache_len):
+    """One token for the whole batch. tokens: (B, 1) int32.
+
+    Returns (logits (B, V), new_cache). ``cache_len`` is the number of valid
+    positions already in the cache (scalar int32).
+    """
+    x = _embed(cfg, params, tokens)
+    fam = cfg.family
+    flags = _is_global_flags(cfg)
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        def body(xc, inp):
+            if fam == "audio":
+                layer_p, kc, vc, xk, xv = inp
+                is_g = None
+            elif flags is not None:
+                layer_p, kc, vc, is_g = inp
+            else:
+                (layer_p, kc, vc), is_g = inp, None
+            h, nk, nv = apply_attention_decode(
+                cfg, layer_p["attn"], apply_norm(cfg, layer_p["norm1"], xc),
+                kc, vc, cache_len, window=cfg.window, is_global=is_g)
+            xc = xc + h
+            if fam == "audio":
+                h, _, _ = apply_attention_decode(
+                    cfg, layer_p["xattn"],
+                    apply_norm(cfg, layer_p["norm_x"], xc), xk, xv,
+                    cache_len, cross=True, rope=False)
+                xc = xc + h
+            xc = _apply_ffn(cfg, layer_p, xc)
+            return xc, (nk, nv)
+
+        if fam == "audio":
+            xs = (params["layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"])
+        elif flags is not None:
+            xs = (params["layers"], cache["k"], cache["v"], flags)
+        else:
+            xs = (params["layers"], cache["k"], cache["v"])
+        x, (nks, nvs) = jax.lax.scan(body, x, xs)
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = nks, nvs
+
+    elif fam == "ssm":
+        def body(xc, inp):
+            layer_p, conv, ssm = inp
+            h, mc = decode_mamba(cfg, layer_p["mamba"], {"conv": conv, "ssm": ssm},
+                                 apply_norm(cfg, layer_p["norm"], xc))
+            return xc + h, (mc["conv"], mc["ssm"])
+        x, (nconv, nssm) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        new_cache = {"conv": nconv, "ssm": nssm}
+
+    elif fam == "hybrid":
+        def mamba_body(xc, inp):
+            layer_p, conv, ssm = inp
+            h, mc = decode_mamba(cfg, layer_p["mamba"], {"conv": conv, "ssm": ssm},
+                                 apply_norm(cfg, layer_p["norm"], xc))
+            return xc + h, (mc["conv"], mc["ssm"])
+
+        def group_body(xc, inp):
+            group_p, conv, ssm, kc, vc = inp
+            xc, (nconv, nssm) = jax.lax.scan(mamba_body, xc,
+                                             (group_p, conv, ssm))
+            sp = params["shared"]
+            h, nk, nv = apply_attention_decode(
+                cfg, sp["attn"], apply_norm(cfg, sp["norm1"], xc), kc, vc,
+                cache_len)
+            xc = _apply_ffn(cfg, sp, xc + h)
+            return xc, (nconv, nssm, nk, nv)
+
+        x, (gconv, gssm, nks, nvs) = jax.lax.scan(
+            group_body, x,
+            (params["mamba_groups"], cache["groups"]["conv"],
+             cache["groups"]["ssm"], cache["shared"]["k"],
+             cache["shared"]["v"]))
+        new_cache = {"groups": {"conv": gconv, "ssm": gssm},
+                     "shared": {"k": nks, "v": nvs}}
+        if "tail" in cache:
+            x, (tconv, tssm) = jax.lax.scan(
+                mamba_body, x,
+                (params["mamba_tail"], cache["tail"]["conv"],
+                 cache["tail"]["ssm"]))
+            new_cache["tail"] = {"conv": tconv, "ssm": tssm}
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _unembed(cfg, params, x)[:, 0], new_cache

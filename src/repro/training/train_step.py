@@ -1,0 +1,143 @@
+"""Train-step factory: loss, microbatch gradient accumulation, remat.
+
+``make_train_step`` closes over the arch/optimizer configs and returns a
+pure function (state, batch) -> (state, metrics) suitable for jit with
+donated state. Microbatching is a ``lax.scan`` over batch splits (the
+standard accumulate-then-update schedule); remat policy is applied per
+layer inside the model's layer scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.transformer import forward, init_params
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: str = "full"           # none | dots | full
+    z_loss: float = 1e-4          # logit norm regularizer (stability)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Mean next-token CE (fp32). logits: (B,S,V); targets: (B,S) int32.
+
+    The gold logit is extracted with an iota-mask reduction rather than
+    ``take_along_axis``: a gather across a vocab-sharded logits tensor makes
+    GSPMD replicate the whole (B,S,V) fp32 array per chip ("involuntary full
+    rematerialization"); the masked reduction stays sharded and fuses.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == targets[..., None], logits, 0.0),
+                   axis=-1)
+    loss = (lse - gold).mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss
+
+
+def init_train_state(cfg: ArchConfig, opt_cfg: OptimizerConfig, key) -> dict:
+    params = init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(opt_cfg, params)}
+
+
+def _split_batch(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for every leaf."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by {n} microbatches"
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def chunked_cross_entropy(cfg: ArchConfig, params, x: jax.Array,
+                          targets: jax.Array, z_loss: float = 0.0,
+                          chunk: int = 512) -> jax.Array:
+    """CE computed per sequence chunk so the (B,S,V) logits never
+    materialize — essential when the vocab does not divide the model axis
+    (e.g. mamba2's 50280) and the logits would otherwise be replicated in
+    fp32 per chip. The chunk body is checkpointed; backward recomputes each
+    chunk's logits."""
+    from ..models.transformer import _unembed
+
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    n = (s + pad) // chunk
+    xc = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    tc_ = targets.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xb, tb = inp
+        logits = _unembed(cfg, params, xb)          # (B, chunk, V) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(jnp.where(iota == tb[..., None], logits, 0.0), axis=-1)
+        valid = (tb >= 0).astype(jnp.float32)
+        loss_sum = jnp.sum((lse - gold) * valid)
+        if z_loss:
+            loss_sum = loss_sum + z_loss * jnp.sum(jnp.square(lse) * valid)
+        return (acc[0] + loss_sum, acc[1] + valid.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(body, (0.0, 0.0), (xc, tc_))
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+def make_loss_fn(cfg: ArchConfig, tc: TrainConfig) -> Callable:
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        model_batch = dict(batch)
+        model_batch["tokens"] = tokens[:, :-1]
+        if "positions" in model_batch:
+            model_batch["positions"] = model_batch["positions"][:, :-1]
+        x = forward(cfg, params, model_batch, remat=tc.remat,
+                    pre_logits=True)
+        return chunked_cross_entropy(cfg, params, x, tokens[:, 1:], tc.z_loss)
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                    tc: TrainConfig = TrainConfig()) -> Callable:
+    loss_fn = make_loss_fn(cfg, tc)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        if tc.microbatches > 1:
+            micro = _split_batch(batch, tc.microbatches)
+
+            def acc_body(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grad_fn(params, mb)
+                grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (0.0, zeros), micro)
+            inv = 1.0 / tc.microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, params, grads, state["opt"])
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,63 @@
+"""Tuning the tuner: exhaustive + meta-strategy hyperparameter tuning."""
+import numpy as np
+import pytest
+
+from repro.core.cache import CachedResult, CacheFile
+from repro.core.hypertuner import (exhaustive_hypertune,
+                                   hyperparam_searchspace, meta_hypertune,
+                                   results_to_cache)
+from repro.core.methodology import make_scorer
+from repro.core.searchspace import SearchSpace
+from repro.core.strategies import STRATEGIES
+from repro.core.tunable import tunables_from_dict
+
+
+def _cache(seed=0):
+    rng = np.random.default_rng(seed)
+    space = SearchSpace(tunables_from_dict({
+        "x": tuple(range(12)), "y": tuple(range(8))}), name="hp")
+    results = {}
+    for cfg in space.valid_configs:
+        x, y = cfg
+        v = 1e-3 * (1 + (x - 3) ** 2 + 2 * (y - 6) ** 2
+                    + 0.3 * rng.random())
+        results[space.config_id(cfg)] = CachedResult("ok", v, (v,) * 2, 0.05)
+    return CacheFile("hp", "d", space, results)
+
+
+def test_hyperparam_searchspace_matches_table():
+    s = hyperparam_searchspace("simulated_annealing")
+    assert s.size == 81  # 3×3×3×3 (paper Table III)
+    s_ext = hyperparam_searchspace("simulated_annealing", extended=True)
+    assert s_ext.size > s.size
+
+
+def test_exhaustive_hypertune_ranks(tmp_path):
+    scorers = [make_scorer(_cache())]
+    res = exhaustive_hypertune("greedy_ils", scorers, repeats=3, seed=0)
+    assert len(res.results) == hyperparam_searchspace("greedy_ils").size
+    ranked = res.ranked()
+    assert ranked[0].score >= ranked[-1].score
+    avg = res.closest_to_mean()
+    assert ranked[-1].score <= avg.score <= ranked[0].score
+
+
+def test_meta_hypertune_finds_good_config():
+    scorers = [make_scorer(_cache())]
+    exh = exhaustive_hypertune("greedy_ils", scorers, repeats=3, seed=0)
+    meta = meta_hypertune("greedy_ils", "random_search", scorers,
+                          extended=False, max_hp_evals=8, repeats=3, seed=0)
+    scores = sorted(r.score for r in exh.results.values())
+    # meta with 8/12 evals should land in the upper half of the exhaustive
+    # distribution (objective values are identical given same seeds)
+    assert meta.best_score >= scores[len(scores) // 2]
+
+
+def test_results_to_cache_roundtrip():
+    scorers = [make_scorer(_cache())]
+    exh = exhaustive_hypertune("greedy_ils", scorers, repeats=2, seed=0)
+    hp_cache = results_to_cache(exh)
+    # objective is negated score: the cache optimum equals -best score
+    assert hp_cache.optimum == pytest.approx(-exh.best.score)
+    sc = make_scorer(hp_cache)
+    assert sc.n_total == len(exh.results)

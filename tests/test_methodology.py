@@ -1,0 +1,91 @@
+"""Performance-score methodology (Eq. 2/3): baseline, budget, aggregation."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.budget import Budget
+from repro.core.cache import CachedResult, CacheFile
+from repro.core.methodology import evaluate_strategy, make_scorer
+from repro.core.runner import SimulationRunner
+from repro.core.searchspace import SearchSpace
+from repro.core.strategies import get_strategy
+from repro.core.tunable import tunables_from_dict
+
+
+def _cache(n: int = 64, seed: int = 0, name: str = "m"):
+    rng = np.random.default_rng(seed)
+    space = SearchSpace(tunables_from_dict({"a": tuple(range(n))}),
+                        name=name)
+    results = {}
+    vals = rng.lognormal(mean=-6, sigma=0.8, size=n)
+    for cfg, v in zip(space.valid_configs, vals):
+        results[space.config_id(cfg)] = CachedResult(
+            "ok", float(v), (float(v),) * 4, 0.3, 0.01)
+    return CacheFile(name, "d", space, results)
+
+
+def test_baseline_monotone_nonincreasing():
+    sc = make_scorer(_cache())
+    ts = np.linspace(0.5, sc.budget_s * 2, 40)
+    base = sc.baseline_at_time(ts)
+    assert np.all(np.diff(base) <= 1e-12)
+
+
+def test_budget_hits_cutoff_value():
+    sc = make_scorer(_cache(), cutoff=0.95)
+    target = sc.median - 0.95 * (sc.median - sc.optimum)
+    assert sc.baseline_at_time(sc.budget_s) <= target + 1e-12
+
+
+def test_random_search_scores_near_zero():
+    sc = make_scorer(_cache())
+    rep = evaluate_strategy(lambda: get_strategy("random_search"), [sc],
+                            repeats=40, seed=3)
+    assert abs(rep.score) < 0.12  # unbiased vs its own baseline
+
+
+def test_score_bounded_above_by_one():
+    sc = make_scorer(_cache())
+    rep = evaluate_strategy(lambda: get_strategy("greedy_ils"), [sc],
+                            repeats=10, seed=0)
+    assert np.all(rep.curve <= 1.0 + 1e-9)
+
+
+def test_oracle_scores_close_to_one():
+    """A 'strategy' that instantly finds the optimum scores ≈ 1."""
+    sc = make_scorer(_cache())
+    best_cfg = min(
+        ((r.time_s, sc.cache.space.config_from_id(k))
+         for k, r in sc.cache.results.items()), key=lambda t: t[0])[1]
+
+    class Oracle:
+        def run(self, space, runner, rng):
+            return runner.run(best_cfg)
+
+    rep = evaluate_strategy(Oracle, [sc], repeats=3, seed=0)
+    # after the first sample point the curve should be ≈ 1
+    assert rep.curve[-1] > 0.95
+
+
+def test_aggregation_averages_spaces():
+    a, b = _cache(seed=1, name="m1"), _cache(seed=2, name="m2")
+    sa = make_scorer(a)
+    sb = make_scorer(b)
+    ra = evaluate_strategy(lambda: get_strategy("random_search"), [sa],
+                           repeats=10, seed=5)
+    rb = evaluate_strategy(lambda: get_strategy("random_search"), [sb],
+                           repeats=10, seed=5)
+    rab = evaluate_strategy(lambda: get_strategy("random_search"), [sa, sb],
+                            repeats=10, seed=5)
+    assert rab.score == pytest.approx((ra.score + rb.score) / 2, abs=1e-9)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_score_trace_neutral_before_first_result(seed):
+    sc = make_scorer(_cache(seed=seed % 7))
+    times = sc.sample_times(10)
+    p = sc.score_trace([], times)
+    assert np.all(p == 0.0)

@@ -1,0 +1,102 @@
+"""Simulation runner, budget accounting and T4 cache round-trips."""
+import math
+import os
+import random
+
+import pytest
+
+from repro.core.budget import Budget, BudgetExhausted
+from repro.core.cache import CachedResult, CacheFile
+from repro.core.runner import SimulationRunner
+from repro.core.searchspace import SearchSpace
+from repro.core.tunable import tunables_from_dict
+
+
+def _cache(n_bad: int = 2):
+    space = SearchSpace(tunables_from_dict({"a": tuple(range(8)),
+                                            "b": (0, 1)}), name="toy")
+    results = {}
+    for i, cfg in enumerate(space.valid_configs):
+        cid = space.config_id(cfg)
+        if i < n_bad:
+            results[cid] = CachedResult("error", math.inf, (), 0.5)
+        else:
+            t = 0.001 * (1 + i)
+            results[cid] = CachedResult("ok", t, (t,) * 4, 0.5, 0.01)
+    return CacheFile("toy", "dev0", space, results)
+
+
+def test_simulation_replay_is_deterministic():
+    cache = _cache()
+    cfg = cache.space.valid_configs[5]
+    r1 = SimulationRunner(cache, Budget(max_seconds=100)).run(cfg)
+    r2 = SimulationRunner(cache, Budget(max_seconds=100)).run(cfg)
+    assert r1.value == r2.value and r1.charge_s == r2.charge_s
+
+
+def test_memoized_revisit_is_free():
+    cache = _cache()
+    runner = SimulationRunner(cache, Budget(max_seconds=100))
+    cfg = cache.space.valid_configs[3]
+    runner.run(cfg)
+    spent = runner.budget.spent_seconds
+    runner.run(cfg)  # revisit
+    assert runner.budget.spent_seconds == spent
+    assert runner.fresh_evals == 1
+
+
+def test_budget_exhaustion_raises():
+    cache = _cache()
+    charge = cache.results[cache.space.config_id(
+        cache.space.valid_configs[4])].charge_s
+    runner = SimulationRunner(cache, Budget(max_seconds=charge * 1.5))
+    runner.run(cache.space.valid_configs[4])
+    runner.run(cache.space.valid_configs[5])
+    with pytest.raises(BudgetExhausted):
+        runner.run(cache.space.valid_configs[6])
+
+
+def test_failed_config_counts_and_charges():
+    cache = _cache()
+    runner = SimulationRunner(cache, Budget(max_seconds=100))
+    bad = cache.space.valid_configs[0]
+    obs = runner.run(bad)
+    assert obs.status == "error" and obs.value == math.inf
+    assert runner.budget.spent_seconds > 0
+    assert runner.best is None
+
+
+def test_trace_records_cumulative_time():
+    cache = _cache()
+    runner = SimulationRunner(cache, Budget(max_seconds=100))
+    for cfg in cache.space.valid_configs[:5]:
+        runner.run(cfg)
+    times = [t for t, _, _ in runner.trace]
+    assert times == sorted(times)
+    assert times[-1] == pytest.approx(runner.budget.spent_seconds)
+
+
+@pytest.mark.parametrize("ext", [".json", ".json.zst"])
+def test_cache_roundtrip(tmp_path, ext):
+    cache = _cache()
+    path = os.path.join(tmp_path, "toy" + ext)
+    cache.save(path)
+    loaded = CacheFile.load(path)
+    assert loaded.kernel == "toy" and loaded.device == "dev0"
+    assert loaded.space.size == cache.space.size
+    for cfg in cache.space.valid_configs:
+        a = cache.lookup(cfg)
+        b = loaded.lookup(cfg)
+        assert a.status == b.status
+        assert a.charge_s == pytest.approx(b.charge_s)
+
+
+def test_loaded_space_validity_matches_results(tmp_path):
+    cache = _cache()
+    path = os.path.join(tmp_path, "t.json")
+    cache.save(path)
+    loaded = CacheFile.load(path)
+    # membership constraint: every valid config of the loaded space is in
+    # the result set (runtime failures included)
+    for cfg in loaded.space.valid_configs:
+        assert loaded.space.config_id(cfg) in loaded.results

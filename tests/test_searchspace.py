@@ -1,0 +1,91 @@
+"""Unit + property tests for the constrained search-space core."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.searchspace import SearchSpace
+from repro.core.tunable import Constraint, Tunable, tunables_from_dict
+
+
+def _space():
+    tunables = tunables_from_dict({
+        "a": (1, 2, 4, 8),
+        "b": (16, 32, 64),
+        "c": ("x", "y"),
+    })
+    constraints = (Constraint(lambda d: d["a"] * d["b"] <= 256,
+                              "a*b <= 256"),)
+    return SearchSpace(tunables, constraints, name="test")
+
+
+def test_enumeration_respects_constraints():
+    s = _space()
+    assert s.cartesian_size == 24
+    assert all(c[0] * c[1] <= 256 for c in s.valid_configs)
+    assert s.size == sum(1 for a in (1, 2, 4, 8) for b in (16, 32, 64)
+                         if a * b <= 256) * 2
+
+
+def test_config_id_roundtrip():
+    s = _space()
+    for c in s.valid_configs:
+        assert s.config_from_id(s.config_id(c)) == c
+
+
+def test_dict_views():
+    s = _space()
+    c = s.valid_configs[0]
+    assert s.from_dict(s.as_dict(c)) == c
+
+
+def test_duplicate_values_rejected():
+    with pytest.raises(ValueError):
+        Tunable("t", (1, 1, 2))
+
+
+def test_neighbors_differ_in_one_tunable():
+    s = _space()
+    for c in s.valid_configs:
+        for n in s.neighbors(c):
+            assert s.is_valid(n)
+            assert sum(x != y for x, y in zip(c, n)) == 1
+
+
+def test_neighbors_strictly_adjacent():
+    s = _space()
+    c = (2, 32, "x")
+    nbrs = s.neighbors(c, strictly_adjacent=True)
+    for n in nbrs:
+        i = next(j for j in range(3) if n[j] != c[j])
+        t = s.tunables[i]
+        assert abs(t.index_of(n[i]) - t.index_of(c[i])) == 1
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_random_config_always_valid(seed):
+    s = _space()
+    assert s.is_valid(s.random_config(random.Random(seed)))
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_nearest_valid_returns_valid(seed):
+    rng = random.Random(seed)
+    s = _space()
+    invalid = (8, 64, "x")  # violates a*b <= 256
+    assert not s.is_valid(invalid)
+    assert s.is_valid(s.nearest_valid(invalid, rng))
+
+
+def test_index_vector_roundtrip():
+    s = _space()
+    for c in s.valid_configs:
+        assert s.from_indices(s.to_indices(c)) == c
+
+
+def test_from_indices_clamps():
+    s = _space()
+    c = s.from_indices([99.0, -5.0, 0.4])
+    assert c == (8, 16, "x")

@@ -1,0 +1,78 @@
+"""Optimization-strategy behaviour on a seeded structured landscape."""
+import math
+import random
+
+import pytest
+
+from repro.core.budget import Budget
+from repro.core.cache import CachedResult, CacheFile
+from repro.core.runner import SimulationRunner
+from repro.core.searchspace import SearchSpace
+from repro.core.strategies import PAPER_STRATEGIES, STRATEGIES, get_strategy
+from repro.core.tunable import tunables_from_dict
+
+
+def _structured_cache():
+    """Smooth bowl + noise: local search should exploit the structure."""
+    space = SearchSpace(tunables_from_dict({
+        "x": tuple(range(16)), "y": tuple(range(16)), "m": ("p", "q"),
+    }), name="bowl")
+    results = {}
+    for cfg in space.valid_configs:
+        x, y, m = cfg
+        v = 1e-3 * (1 + (x - 11) ** 2 + (y - 4) ** 2
+                    + (3 if m == "q" else 0))
+        results[space.config_id(cfg)] = CachedResult(
+            "ok", v, (v,) * 2, 0.05, 0.0)
+    return CacheFile("bowl", "d", space, results)
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_strategy_runs_and_respects_budget(name):
+    cache = _structured_cache()
+    budget = Budget(max_evals=40)
+    runner = SimulationRunner(cache, budget)
+    best = get_strategy(name).run(cache.space, runner, random.Random(0))
+    assert runner.fresh_evals <= 40
+    assert best is None or math.isfinite(best.value)
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_strategy_deterministic_given_seed(name):
+    cache = _structured_cache()
+
+    def run_once():
+        runner = SimulationRunner(cache, Budget(max_evals=30))
+        get_strategy(name).run(cache.space, runner, random.Random(42))
+        return [(v, c) for _, v, c in runner.trace]
+
+    assert run_once() == run_once()
+
+
+@pytest.mark.parametrize("name", ["greedy_ils", "mls",
+                                  "simulated_annealing"])
+def test_local_search_beats_tiny_random_budget(name):
+    """On a smooth bowl with 512 configs and 60 evals, exploiting locality
+    should find a better config than random search (same budget)."""
+    cache = _structured_cache()
+
+    def best_of(nm, seed):
+        runner = SimulationRunner(cache, Budget(max_evals=60))
+        get_strategy(nm).run(cache.space, runner, random.Random(seed))
+        return runner.best.value if runner.best else math.inf
+
+    wins = sum(best_of(name, s) <= best_of("random_search", s)
+               for s in range(7))
+    assert wins >= 4, f"{name} lost to random search too often"
+
+
+def test_hyperparameters_validated():
+    with pytest.raises(ValueError):
+        get_strategy("pso", bogus=3)
+
+
+def test_paper_strategy_registry():
+    assert set(PAPER_STRATEGIES) <= set(STRATEGIES)
+    for name in PAPER_STRATEGIES:
+        cls = STRATEGIES[name]
+        assert cls.HYPERPARAM_SPACE, f"{name} must expose Table III values"
