@@ -1,24 +1,34 @@
-"""Shared benchmark plumbing: hub scorers, cached hypertuning results."""
+"""Shared benchmark plumbing: hub scorers, journaled hypertuning campaigns.
+
+Campaigns run through ``core.parallel``: every completed hyperparameter
+configuration is checkpointed to a JSONL journal under ``experiments/``, so
+re-running a benchmark resumes instead of recomputing, and ``REPRO_WORKERS``
+fans configurations out over a worker pool (bit-identical results at any
+worker count). The same journals are readable with ``python -m repro
+report <journal>``.
+"""
 from __future__ import annotations
 
-import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np  # noqa: E402
+import numpy as np  # noqa: E402,F401  (re-exported for figure modules)
 
-from repro.core.dataset import load_hub, train_test_caches  # noqa: E402
-from repro.core.hypertuner import (HyperConfigResult,  # noqa: E402
+from repro.core.dataset import load_hub, train_test_caches  # noqa: E402,F401
+from repro.core.hypertuner import (HyperConfigResult,  # noqa: E402,F401
                                    HyperTuningResult, exhaustive_hypertune,
                                    score_hyperconfig)
-from repro.core.methodology import AggregateReport, make_scorer  # noqa: E402
+from repro.core.methodology import AggregateReport, make_scorer  # noqa: E402,F401
+from repro.core.parallel import (CampaignExecutor,  # noqa: E402
+                                 CampaignJournal)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "hypertune")
 FAST = os.environ.get("REPRO_FAST", "0") == "1"
 REPEATS = 5 if FAST else 25
+WORKERS = int(os.environ.get("REPRO_WORKERS", "1"))
 PAPER_SET = ("dual_annealing", "genetic_algorithm", "pso",
              "simulated_annealing")
 
@@ -38,49 +48,19 @@ def test_scorers():
     return _scorer_cache["test"]
 
 
-def _result_path(strategy: str) -> str:
+def _journal_path(strategy: str) -> str:
     return os.path.join(RESULTS_DIR, f"exhaustive_{strategy}"
-                        f"{'_fast' if FAST else ''}.json")
+                        f"{'_fast' if FAST else ''}.jsonl")
 
 
 def exhaustive_results(strategy: str, progress=None) -> HyperTuningResult:
-    """Exhaustive hypertuning on the train split, cached to disk (this is
-    the expensive step shared by Figs. 2/3/5/6)."""
-    path = _result_path(strategy)
-    if os.path.exists(path):
-        with open(path) as f:
-            d = json.load(f)
-        results = {}
-        for hp_id, rec in d["results"].items():
-            rep = AggregateReport(
-                score=rec["score"], curve=np.array(rec["curve"]),
-                per_space={k: np.array(v)
-                           for k, v in rec["per_space"].items()},
-                per_space_score=rec["per_space_score"],
-                simulated_seconds=rec["simulated_seconds"])
-            results[hp_id] = HyperConfigResult(rec["hyperparams"], rep)
-        return HyperTuningResult(strategy, results, d["wall_seconds"],
-                                 d["simulated_seconds"])
-    res = exhaustive_hypertune(strategy, train_scorers(), repeats=REPEATS,
-                               seed=0, progress=progress)
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    payload = {
-        "strategy": strategy,
-        "wall_seconds": res.wall_seconds,
-        "simulated_seconds": res.simulated_seconds,
-        "repeats": REPEATS,
-        "results": {
-            hp_id: {
-                "hyperparams": r.hyperparams,
-                "score": r.score,
-                "curve": r.report.curve.tolist(),
-                "per_space": {k: v.tolist()
-                              for k, v in r.report.per_space.items()},
-                "per_space_score": r.report.per_space_score,
-                "simulated_seconds": r.report.simulated_seconds,
-            } for hp_id, r in res.results.items()
-        },
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f)
-    return res
+    """Exhaustive hypertuning on the train split (the expensive step shared
+    by Figs. 2/3/5/6), journaled to ``experiments/hypertune/``: a completed
+    campaign is reloaded from the journal instantly, an interrupted one
+    resumes from its last finished configuration."""
+    journal = CampaignJournal(_journal_path(strategy))
+    with CampaignExecutor(workers=WORKERS) as ex:
+        return exhaustive_hypertune(strategy, train_scorers(),
+                                    repeats=REPEATS, seed=0,
+                                    progress=progress, executor=ex,
+                                    journal=journal)

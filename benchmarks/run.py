@@ -11,35 +11,52 @@
   fig9      live-vs-simulation cost (the ~130× speedup claim)
   roofline  per-cell roofline table from the dry-run artifacts
 
-Usage: PYTHONPATH=src python -m benchmarks.run [names...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--workers N] [names...]
 Set REPRO_FAST=1 for a reduced-repeats smoke pass.
+
+Campaigns are journaled under ``experiments/hypertune/`` and resume if
+interrupted; ``--workers`` parallelizes them (results stay bit-identical).
+For a single ad-hoc campaign, use the unified CLI instead:
+``python -m repro hypertune|meta|simulate|report`` (see ``repro.cli``).
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import os
 import time
-
-from . import (fig2_violins, fig3_generalization, fig5_curves, fig6_meta,
-               fig8_extended, fig9_speedup, roofline_table, table2_hub)
-
-ALL = {
-    "table2": table2_hub.main,
-    "fig2": fig2_violins.main,
-    "fig3": fig3_generalization.main,
-    "fig5": fig5_curves.main,
-    "fig6": fig6_meta.main,
-    "fig8": fig8_extended.main,
-    "fig9": fig9_speedup.main,
-    "roofline": roofline_table.main,
-}
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("names", nargs="*", help="tables/figures to run "
+                    "(default: all)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="campaign worker pool size (same as REPRO_WORKERS)")
+    args = ap.parse_args()
+    if args.workers is not None:
+        os.environ["REPRO_WORKERS"] = str(args.workers)
+
+    # import after REPRO_WORKERS is set: common reads it at import time
+    from . import (fig2_violins, fig3_generalization, fig5_curves, fig6_meta,
+                   fig8_extended, fig9_speedup, roofline_table, table2_hub)
+    all_benches = {
+        "table2": table2_hub.main,
+        "fig2": fig2_violins.main,
+        "fig3": fig3_generalization.main,
+        "fig5": fig5_curves.main,
+        "fig6": fig6_meta.main,
+        "fig8": fig8_extended.main,
+        "fig9": fig9_speedup.main,
+        "roofline": roofline_table.main,
+    }
+    names = args.names or list(all_benches)
+    unknown = [n for n in names if n not in all_benches]
+    if unknown:
+        ap.error(f"unknown benchmarks {unknown}; known: {list(all_benches)}")
     for name in names:
         t0 = time.perf_counter()
         print(f"\n================ {name} ================", flush=True)
-        ALL[name]()
+        all_benches[name]()
         print(f"[{name} done in {time.perf_counter() - t0:.1f}s]", flush=True)
 
 

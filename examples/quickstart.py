@@ -1,10 +1,16 @@
 """Quickstart: tune the tuner in two minutes.
 
-Loads two benchmark-hub search spaces, runs exhaustive hyperparameter tuning
-of a local-search strategy through the simulation mode, and shows the score
-spread + the tuned configuration (the paper's core loop at toy scale).
+Loads two benchmark-hub search spaces, runs a *parallel, journaled*
+exhaustive hyperparameter campaign of a strategy through the simulation
+mode, and shows the score spread + the tuned configuration (the paper's
+core loop at toy scale). Re-running resumes from the journal instantly.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+
+The same workflow, from the unified CLI:
+    python -m repro hypertune --strategy pso --kernels gemm,hotspot \
+        --devices tpu_v5e --repeats 10 --workers 4 --journal pso.jsonl
+    python -m repro report pso.jsonl
 """
 import os
 import sys
@@ -16,6 +22,7 @@ import numpy as np
 from repro.core.dataset import load_hub
 from repro.core.hypertuner import exhaustive_hypertune, meta_hypertune
 from repro.core.methodology import make_scorer
+from repro.core.parallel import CampaignExecutor, CampaignJournal
 
 # 1. simulation-mode data: two brute-forced search spaces from the hub
 hub = load_hub(kernels=("gemm", "hotspot"), devices=("tpu_v5e",))
@@ -24,15 +31,20 @@ for s in scorers:
     print(f"space {s.name}: {s.n_total} configs, optimum "
           f"{s.optimum*1e3:.3f} ms, budget {s.budget_s:.0f} simulated s")
 
-# 2. exhaustive hyperparameter tuning (Eq. 4) of PSO (Table III grid)
-res = exhaustive_hypertune("pso", scorers, repeats=10, seed=0)
+# 2. exhaustive hyperparameter tuning (Eq. 4) of PSO (Table III grid),
+#    fanned over a worker pool and checkpointed after every configuration
+journal = CampaignJournal(os.path.join(os.path.dirname(__file__),
+                                       "quickstart_pso.jsonl"))
+with CampaignExecutor(workers=os.cpu_count() or 1) as ex:
+    res = exhaustive_hypertune("pso", scorers, repeats=10, seed=0,
+                               executor=ex, journal=journal)
 scores = np.array(res.scores)
 print(f"\n{len(scores)} hyperparameter configs: "
       f"best {scores.max():+.3f} / mean {scores.mean():+.3f} / "
       f"worst {scores.min():+.3f}")
 print(f"best hyperparameters: {res.best.hyperparams}")
 print(f"simulated tuning cost {res.simulated_seconds/3600:.1f} h replayed "
-      f"in {res.wall_seconds:.1f} s wall")
+      f"in {res.wall_seconds:.1f} s wall (journal: {journal.path})")
 
 # 3. the same search, driven by a meta-strategy instead of exhaustion
 meta = meta_hypertune("pso", "dual_annealing", scorers,

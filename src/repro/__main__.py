@@ -1,0 +1,6 @@
+"""``python -m repro`` — the unified CLI (see ``repro.cli``)."""
+import sys
+
+from .cli import main
+
+sys.exit(main())

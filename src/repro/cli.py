@@ -1,0 +1,292 @@
+"""Unified command-line interface: ``python -m repro <subcommand>``.
+
+One entry point for the paper's workflow, replacing the ad-hoc scripts in
+``examples/`` and ``benchmarks/`` for everyday use:
+
+  simulate   score one strategy (fixed hyperparameters) with the
+             methodology in simulation mode (paper Sec. III-B/C, Eqs. 2–3)
+  hypertune  exhaustive hyperparameter-grid campaign (Sec. IV-B,
+             Table III) — parallel (``--workers``) and resumable
+             (``--journal``)
+  meta       meta-strategy hyperparameter optimization (Sec. IV-C,
+             Table IV / Eq. 4), journaled for resume
+  report     inspect a campaign journal: ranking, optimal-vs-average
+             improvement (the 94.8 % metric), wall-clock parallelism
+
+Search spaces come either from the benchmark hub (``--kernels/--devices``
+or ``--split``, Sec. III-D) or from explicit T4 cache files (``--cache``).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+import time
+from typing import Sequence
+
+from .core.cache import CacheFile
+from .core.hypertuner import (HyperConfigResult, HyperTuningResult,
+                              exhaustive_hypertune, hyperparam_searchspace,
+                              meta_hypertune, score_hyperconfig)
+from .core.methodology import SpaceScorer, make_scorer
+from .core.parallel import CampaignExecutor, CampaignJournal, report_from_json
+from .core.strategies import STRATEGIES
+
+
+# ------------------------------------------------------------ shared options
+def _add_space_args(p: argparse.ArgumentParser) -> None:
+    g = p.add_argument_group("search spaces (scoring data)")
+    g.add_argument("--cache", action="append", default=[], metavar="PATH",
+                   help="T4 cache file (.json/.json.gz/.json.zst); "
+                        "repeatable. Overrides the hub options.")
+    g.add_argument("--split", choices=("train", "test"), default="train",
+                   help="hub device split (paper Sec. III-D; default train)")
+    g.add_argument("--kernels", default=None,
+                   help="comma-separated hub kernels (default: all)")
+    g.add_argument("--devices", default=None,
+                   help="comma-separated hub devices (overrides --split)")
+    g.add_argument("--hub-root", default=None,
+                   help="hub directory (default: the bundled hub path)")
+
+
+def _add_exec_args(p: argparse.ArgumentParser) -> None:
+    g = p.add_argument_group("execution")
+    g.add_argument("--workers", type=int, default=1,
+                   help="worker pool size (1 = serial; results are "
+                        "bit-identical at any worker count)")
+    g.add_argument("--backend", choices=("auto", "thread", "process"),
+                   default="auto", help="worker pool backend")
+    g.add_argument("--repeats", type=int, default=25,
+                   help="methodology repeats per space (paper uses 25)")
+    g.add_argument("--seed", type=int, default=0)
+
+
+def _parse_hyperparams(text: str | None) -> dict:
+    """Parse ``k=v,k2=v2`` with Python-literal values (``0.05``, ``True``,
+    ``'greedy'``); bare words fall back to strings."""
+    out: dict = {}
+    for item in filter(None, (text or "").split(",")):
+        key, _, raw = item.partition("=")
+        if not _:
+            raise SystemExit(f"--hyperparams: expected k=v, got {item!r}")
+        try:
+            out[key.strip()] = ast.literal_eval(raw.strip())
+        except (ValueError, SyntaxError):
+            out[key.strip()] = raw.strip()
+    return out
+
+
+def build_scorers(args) -> list[SpaceScorer]:
+    """Resolve the scoring data (paper Sec. III-B: one scorer per brute-
+    forced search space) from ``--cache`` files or the benchmark hub."""
+    if args.cache:
+        return [make_scorer(CacheFile.load(p)) for p in args.cache]
+    from .core.dataset import DEFAULT_ROOT, load_hub
+    from .core.devices import TEST_DEVICES, TRAIN_DEVICES
+    root = args.hub_root or DEFAULT_ROOT
+    kernels = args.kernels.split(",") if args.kernels else None
+    if args.devices:
+        devices = args.devices.split(",")
+    else:
+        devices = list(TRAIN_DEVICES if args.split == "train"
+                       else TEST_DEVICES)
+    hub = load_hub(root, kernels=kernels, devices=devices)
+    if not hub:
+        raise SystemExit("no hub spaces matched the selection")
+    return [make_scorer(c) for _, c in sorted(hub.items())]
+
+
+def _progress(quiet: bool):
+    if quiet:
+        return None
+    return lambda msg: print(msg, flush=True)
+
+
+# -------------------------------------------------------------- subcommands
+def cmd_simulate(args) -> int:
+    """Score one strategy configuration (paper Sec. III-B, Eqs. 2–3)."""
+    scorers = build_scorers(args)
+    hp = _parse_hyperparams(args.hyperparams)
+    with CampaignExecutor(args.workers, args.backend) as ex:
+        report = score_hyperconfig(args.strategy, hp, scorers,
+                                   repeats=args.repeats, seed=args.seed,
+                                   executor=ex)
+    for name, score in sorted(report.per_space_score.items()):
+        print(f"  {name:28s} {score:+.4f}")
+    print(f"aggregate score (Eq. 3): {report.score:+.4f}  "
+          f"[{args.strategy} x{args.repeats} repeats, "
+          f"{len(scorers)} spaces]")
+    print(f"simulated {report.simulated_seconds/3600:.2f} h of tuning in "
+          f"{report.wall_seconds:.1f} s wall")
+    return 0
+
+
+def cmd_hypertune(args) -> int:
+    """Exhaustive hyperparameter tuning (paper Sec. IV-B, Table III)."""
+    scorers = build_scorers(args)
+    journal = CampaignJournal(args.journal) if args.journal else None
+    t0 = time.perf_counter()
+    with CampaignExecutor(args.workers, args.backend) as ex:
+        res = exhaustive_hypertune(args.strategy, scorers,
+                                   repeats=args.repeats, seed=args.seed,
+                                   progress=_progress(args.quiet),
+                                   executor=ex, journal=journal)
+    wall = time.perf_counter() - t0
+    _print_ranking(res.results, args.top)
+    best, avg = res.best, res.closest_to_mean()
+    rel = (best.score - avg.score) / max(abs(avg.score), 1e-2)
+    print(f"optimal vs average config: {best.score:+.4f} vs {avg.score:+.4f}"
+          f" ({100*rel:+.1f}%; paper Sec. IV-B reports +94.8% on average)")
+    print(f"campaign: {len(res.results)} configs, "
+          f"{res.simulated_seconds/3600:.2f} simulated h replayed in "
+          f"{wall:.1f} s wall ({args.workers} workers)")
+    if journal:
+        print(f"journal: {journal.path}")
+    return 0
+
+
+def cmd_meta(args) -> int:
+    """Meta-strategy hyperparameter tuning (paper Sec. IV-C, Eq. 4)."""
+    scorers = build_scorers(args)
+    journal = CampaignJournal(args.journal) if args.journal else None
+    with CampaignExecutor(args.workers, args.backend) as ex:
+        res = meta_hypertune(args.strategy, args.meta_strategy, scorers,
+                             extended=not args.table3_grid,
+                             max_hp_evals=args.max_hp_evals,
+                             repeats=args.repeats, seed=args.seed,
+                             meta_hyperparams=_parse_hyperparams(
+                                 args.meta_hyperparams),
+                             progress=_progress(args.quiet),
+                             executor=ex, journal=journal)
+    grid = hyperparam_searchspace(args.strategy,
+                                  extended=not args.table3_grid)
+    print(f"best hyperparameters for {args.strategy} "
+          f"(found by {args.meta_strategy}): {res.best_hyperparams}")
+    print(f"score {res.best_score:+.4f} after {len(res.evaluated)} of "
+          f"{grid.size} grid points ({res.wall_seconds:.1f} s wall)")
+    if journal:
+        print(f"journal: {journal.path}")
+    return 0
+
+
+def cmd_report(args) -> int:
+    """Summarize a campaign journal (no recomputation)."""
+    journal = CampaignJournal(args.journal)
+    header, records = journal.read()
+    if header is None:
+        raise SystemExit(f"no journal at {args.journal}")
+    mode = header.get("mode", "?")
+    print(f"campaign: {mode} {header.get('strategy')} "
+          f"(repeats={header.get('repeats')}, seed={header.get('seed')})")
+    print(f"spaces: {', '.join(header.get('spaces', []))}")
+    if not records:
+        print("no completed evaluations yet")
+        return 0
+    if mode == "exhaustive":
+        results = {r["hp_id"]: HyperConfigResult(
+            r["hyperparams"], report_from_json(r["report"]))
+            for r in records}
+        grid = hyperparam_searchspace(header["strategy"])
+        print(f"progress: {len(results)}/{grid.size} configurations")
+        _print_ranking(results, args.top)
+        res = HyperTuningResult(header["strategy"], results, 0.0, 0.0)
+        best, avg = res.best, res.closest_to_mean()
+        rel = (best.score - avg.score) / max(abs(avg.score), 1e-2)
+        print(f"optimal vs average config: {best.score:+.4f} vs "
+              f"{avg.score:+.4f} ({100*rel:+.1f}%)")
+        work = sum(r.report.wall_seconds for r in results.values())
+    else:
+        ranked = sorted(records, key=lambda r: -r["score"])[:args.top]
+        for r in ranked:
+            print(f"  {r['score']:+.4f}  {r['hp_id']}")
+        work = 0.0
+    done_wall = max(r.get("done_wall", 0.0) for r in records)
+    simulated = sum(r["report"]["simulated_seconds"] if "report" in r
+                    else r["simulated_seconds"] for r in records)
+    print(f"simulated tuning replayed: {simulated/3600:.2f} h")
+    if done_wall:
+        rate = 60.0 * len(records) / done_wall
+        print(f"campaign wall: {done_wall:.1f} s "
+              f"({rate:.1f} configs/min)")
+    if work and done_wall:
+        print(f"aggregate worker compute: {work:.1f} s -> "
+              f"average parallelism {work/done_wall:.2f}x")
+    return 0
+
+
+def _print_ranking(results: dict, top: int) -> None:
+    ranked = sorted(results.items(), key=lambda kv: -kv[1].score)
+    for hp_id, r in ranked[:top]:
+        print(f"  {r.score:+.4f}  {hp_id}")
+    if len(ranked) > top:
+        print(f"  ... {len(ranked) - top} more "
+              f"(worst {ranked[-1][1].score:+.4f})")
+
+
+# ------------------------------------------------------------------ parser
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro",
+        description="Tuning the Tuner — simulation-mode auto-tuning and "
+                    "hyperparameter campaigns (parallel + resumable)")
+    sub = p.add_subparsers(dest="command", required=True)
+
+    ps = sub.add_parser("simulate", help="score one strategy configuration "
+                        "with the methodology (Sec. III-B)")
+    ps.add_argument("--strategy", required=True, choices=sorted(STRATEGIES))
+    ps.add_argument("--hyperparams", default=None, metavar="K=V,...",
+                    help="strategy hyperparameters (default: DEFAULTS)")
+    _add_space_args(ps)
+    _add_exec_args(ps)
+    ps.set_defaults(fn=cmd_simulate)
+
+    ph = sub.add_parser("hypertune", help="exhaustive hyperparameter "
+                        "campaign (Table III), parallel + resumable")
+    ph.add_argument("--strategy", required=True, choices=sorted(STRATEGIES))
+    ph.add_argument("--journal", default=None, metavar="PATH",
+                    help="JSONL checkpoint; rerun with the same path to "
+                         "resume an interrupted campaign")
+    ph.add_argument("--top", type=int, default=5,
+                    help="show the N best configurations")
+    ph.add_argument("--quiet", action="store_true")
+    _add_space_args(ph)
+    _add_exec_args(ph)
+    ph.set_defaults(fn=cmd_hypertune)
+
+    pm = sub.add_parser("meta", help="meta-strategy hyperparameter "
+                        "optimization (Eq. 4, Table IV)")
+    pm.add_argument("--strategy", required=True, choices=sorted(STRATEGIES))
+    pm.add_argument("--meta-strategy", required=True,
+                    choices=sorted(STRATEGIES))
+    pm.add_argument("--max-hp-evals", type=int, default=50)
+    pm.add_argument("--table3-grid", action="store_true",
+                    help="search the small Table III grid instead of the "
+                         "extended Table IV space")
+    pm.add_argument("--meta-hyperparams", default=None, metavar="K=V,...")
+    pm.add_argument("--journal", default=None, metavar="PATH")
+    pm.add_argument("--quiet", action="store_true")
+    _add_space_args(pm)
+    _add_exec_args(pm)
+    pm.set_defaults(fn=cmd_meta)
+
+    pr = sub.add_parser("report", help="summarize a campaign journal")
+    pr.add_argument("journal", metavar="JOURNAL",
+                    help="path to a campaign JSONL journal")
+    pr.add_argument("--top", type=int, default=10)
+    pr.set_defaults(fn=cmd_report)
+    return p
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except ValueError as e:
+        # domain errors (journal mismatch, bad cache format, unknown
+        # hyperparameters) are user errors, not crashes
+        raise SystemExit(f"error: {e}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

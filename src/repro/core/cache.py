@@ -14,14 +14,64 @@ replayed with exact simulated-time accounting.
 from __future__ import annotations
 
 import dataclasses
+import gzip
 import json
 import os
 from typing import Mapping
 
-import zstandard
+try:  # optional: zstd gives the best ratio, but the stdlib must suffice
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
 
 from .searchspace import SearchSpace
 from .tunable import Config, Constraint, Tunable
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+_GZIP_MAGIC = b"\x1f\x8b"
+
+
+def _compress(payload: bytes, path: str) -> bytes:
+    """Compress per extension. Without ``zstandard``, ``.zst`` files are
+    written gzip-compressed instead — ``_decompress`` sniffs magic bytes, so
+    the fallback stays round-trippable and portable."""
+    if path.endswith(".zst"):
+        if zstandard is not None:
+            return zstandard.ZstdCompressor(level=9).compress(payload)
+        return gzip.compress(payload, compresslevel=9)
+    if path.endswith(".gz"):
+        return gzip.compress(payload, compresslevel=9)
+    return payload
+
+
+def _decompress(payload: bytes, path: str) -> bytes:
+    """Decompress by magic bytes (extension-agnostic: a ``.zst`` file written
+    by the gzip fallback still loads)."""
+    if payload[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                f"{path} is zstd-compressed but the 'zstandard' module is not "
+                f"installed; install it or re-save the cache as .json/.json.gz")
+        return zstandard.ZstdDecompressor().decompress(payload)
+    if payload[:2] == _GZIP_MAGIC:
+        return gzip.decompress(payload)
+    return payload
+
+
+class _Membership:
+    """Picklable membership predicate for caches loaded from disk.
+
+    Static constraints excluded configs from the brute force entirely, so
+    membership in the results *is* the original validity predicate. A class
+    (rather than a closure) so that reconstructed spaces — and the scorers
+    built on them — can cross process boundaries in parallel campaigns."""
+
+    def __init__(self, names: tuple, present: frozenset):
+        self.names = names
+        self.present = present
+
+    def __call__(self, conf: Mapping) -> bool:
+        return ",".join(str(conf[n]) for n in self.names) in self.present
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,9 +146,7 @@ class CacheFile:
 
     def save(self, path: str) -> None:
         """Write .json or .json.zst depending on extension; atomic rename."""
-        payload = json.dumps(self.to_json()).encode()
-        if path.endswith(".zst"):
-            payload = zstandard.ZstdCompressor(level=9).compress(payload)
+        payload = _compress(json.dumps(self.to_json()).encode(), path)
         tmp = path + ".tmp"
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(tmp, "wb") as f:
@@ -109,9 +157,7 @@ class CacheFile:
     def load(path: str, space: SearchSpace | None = None) -> "CacheFile":
         with open(path, "rb") as f:
             payload = f.read()
-        if path.endswith(".zst"):
-            payload = zstandard.ZstdDecompressor().decompress(payload)
-        d = json.loads(payload)
+        d = json.loads(_decompress(payload, path))
         if d.get("format") != "T4-mini":
             raise ValueError(f"unknown cache format {d.get('format')!r}")
         if space is None:
@@ -122,10 +168,8 @@ class CacheFile:
             tunables = tuple(Tunable(n, tuple(v)) for n, v in d["tunables"].items())
             names = tuple(d["tunables"].keys())
             present = frozenset(d["results"].keys())
-            member = Constraint(
-                lambda conf, _n=names, _p=present:
-                    ",".join(str(conf[n]) for n in _n) in _p,
-                "config present in brute-forced results")
+            member = Constraint(_Membership(names, present),
+                                "config present in brute-forced results")
             space = SearchSpace(tunables, (member,),
                                 name=f"{d['kernel']}@{d['device']}")
         results = {

@@ -16,6 +16,11 @@ aggregate performance score (strategies minimize), and
 ``results_to_cache``: exhaustive results repackaged as a synthetic T4 cache
 so that meta-strategies can themselves be scored with the methodology
 (paper Fig. 6) — the recursion that gives the paper its title.
+
+Campaign execution is delegated to ``core.parallel``: both modes accept a
+``CampaignExecutor`` (worker-pool fan-out, bit-identical to serial) and a
+``CampaignJournal`` (JSONL checkpointing + resume); see that module and the
+``python -m repro hypertune|meta`` CLI.
 """
 from __future__ import annotations
 
@@ -27,6 +32,9 @@ from typing import Callable, Mapping, Sequence
 from .budget import Budget
 from .cache import CachedResult, CacheFile
 from .methodology import AggregateReport, SpaceScorer, evaluate_strategy
+from .parallel import (CampaignExecutor, CampaignJournal, StrategyFactory,
+                       campaign_header, report_from_json, report_to_json,
+                       score_hyperconfig_task)
 from .runner import Runner
 from .searchspace import SearchSpace
 from .strategies import STRATEGIES, get_strategy
@@ -84,29 +92,71 @@ class HyperTuningResult:
 
 def score_hyperconfig(strategy_name: str, hyperparams: Mapping,
                       scorers: Sequence[SpaceScorer], repeats: int = 25,
-                      seed: int = 0) -> AggregateReport:
-    return evaluate_strategy(lambda: get_strategy(strategy_name, **hyperparams),
-                             scorers, repeats=repeats, seed=seed)
+                      seed: int = 0, executor: CampaignExecutor | None = None
+                      ) -> AggregateReport:
+    """Score one hyperparameter configuration with the methodology (Eq. 3).
+
+    ``executor`` optionally fans the (space × repeat) grid out in parallel —
+    use it when scoring a *single* configuration; campaign-level callers
+    should parallelize over configurations instead (one task per config)."""
+    return evaluate_strategy(StrategyFactory.create(strategy_name, hyperparams),
+                             scorers, repeats=repeats, seed=seed,
+                             executor=executor)
 
 
 def exhaustive_hypertune(strategy_name: str, scorers: Sequence[SpaceScorer],
                          repeats: int = 25, seed: int = 0,
-                         progress: Callable[[str], None] | None = None
+                         progress: Callable[[str], None] | None = None,
+                         executor: CampaignExecutor | None = None,
+                         journal: CampaignJournal | None = None
                          ) -> HyperTuningResult:
+    """Enumerate and score the full hyperparameter grid (paper Table III).
+
+    ``executor`` fans configurations out over a worker pool; results are
+    assembled in grid-enumeration order, so parallel campaigns are
+    bit-identical to serial ones (Sec. III-C determinism). ``journal``
+    checkpoints every completed configuration to JSONL; an interrupted
+    campaign restarted with the same journal resumes where it left off,
+    re-scoring nothing."""
     space = hyperparam_searchspace(strategy_name)
     t0 = time.perf_counter()
-    results: dict[str, HyperConfigResult] = {}
-    simulated = 0.0
-    for i, cfg in enumerate(space.valid_configs):
-        hp = space.as_dict(cfg)
-        report = score_hyperconfig(strategy_name, hp, scorers, repeats, seed)
-        results[hyperparam_id(hp)] = HyperConfigResult(hp, report)
-        simulated += report.simulated_seconds
+    hp_list = [space.as_dict(cfg) for cfg in space.valid_configs]
+    ids = [hyperparam_id(hp) for hp in hp_list]
+    done: dict[str, HyperConfigResult] = {}
+    prior_wall = 0.0  # campaign wall already spent before this (resumed) run
+    if journal is not None:
+        header = campaign_header("exhaustive", strategy_name, scorers,
+                                 repeats, seed)
+        for rec in journal.ensure_header(header):
+            done[rec["hp_id"]] = HyperConfigResult(
+                rec["hyperparams"], report_from_json(rec["report"]))
+            prior_wall = max(prior_wall, rec.get("done_wall", 0.0))
+        if done and progress:
+            progress(f"resumed {len(done)}/{space.size} configs from "
+                     f"{journal.path}")
+    pending = [(i, hp) for i, hp in enumerate(hp_list) if ids[i] not in done]
+    n_done = len(done)
+    executor = executor or CampaignExecutor()
+    tasks = [(strategy_name, hp, repeats, seed) for _, hp in pending]
+    for t_idx, report in executor.map(score_hyperconfig_task, tasks,
+                                      shared=tuple(scorers)):
+        i, hp = pending[t_idx]
+        done[ids[i]] = HyperConfigResult(hp, report)
+        if journal is not None:
+            # done_wall is cumulative across resumes, so wall-clock stays
+            # the true campaign cost (fig9's speedup claim depends on it)
+            journal.append({"hp_id": ids[i], "hyperparams": hp,
+                            "report": report_to_json(report),
+                            "done_wall": prior_wall
+                            + time.perf_counter() - t0})
+        n_done += 1
         if progress:
-            progress(f"[{i+1}/{space.size}] {strategy_name} "
-                     f"{hyperparam_id(hp)} -> {report.score:+.4f}")
+            progress(f"[{n_done}/{space.size}] {strategy_name} "
+                     f"{ids[i]} -> {report.score:+.4f}")
+    results = {ids[i]: done[ids[i]] for i in range(len(hp_list))}
+    simulated = sum(r.report.simulated_seconds for r in results.values())
     return HyperTuningResult(strategy_name, results,
-                             time.perf_counter() - t0, simulated)
+                             prior_wall + time.perf_counter() - t0, simulated)
 
 
 # --------------------------------------------------------------------- meta
@@ -142,22 +192,57 @@ def meta_hypertune(strategy_name: str, meta_strategy_name: str,
                    scorers: Sequence[SpaceScorer], extended: bool = True,
                    max_hp_evals: int = 50, repeats: int = 25, seed: int = 0,
                    meta_hyperparams: Mapping | None = None,
-                   progress: Callable[[str], None] | None = None
+                   progress: Callable[[str], None] | None = None,
+                   executor: CampaignExecutor | None = None,
+                   journal: CampaignJournal | None = None
                    ) -> MetaTuningResult:
-    """Optimize hyperparameters with a strategy as the meta-strategy (Eq. 4)."""
+    """Optimize hyperparameters with a strategy as the meta-strategy (Eq. 4).
+
+    The meta-level is inherently sequential (each proposal depends on the
+    previous observation), so ``executor`` parallelizes *within* one
+    hyperparameter evaluation (the methodology's space × repeat grid).
+    ``journal`` memoizes completed evaluations: because the objective is
+    deterministic given ``(hyperparams, repeats, seed)``, a resumed campaign
+    replays the meta-strategy's path, serving already-journaled evaluations
+    from the checkpoint and recomputing nothing (paper Sec. IV-C)."""
     space = hyperparam_searchspace(strategy_name, extended=extended)
     evaluated: dict[str, float] = {}
+    memo: dict[str, tuple[float, float]] = {}
+    prior_wall = 0.0  # campaign wall already spent before this (resumed) run
+    if journal is not None:
+        header = campaign_header("meta", strategy_name, scorers, repeats,
+                                 seed, meta_strategy=meta_strategy_name,
+                                 extended=extended,
+                                 max_hp_evals=max_hp_evals)
+        for rec in journal.ensure_header(header):
+            memo[rec["hp_id"]] = (rec["score"], rec["simulated_seconds"])
+            prior_wall = max(prior_wall, rec.get("done_wall", 0.0))
+        if memo and progress:
+            progress(f"resumed {len(memo)} evaluations from {journal.path}")
     t0 = time.perf_counter()
 
     def objective(cfg: Config) -> tuple:
         hp = space.as_dict(cfg)
-        report = score_hyperconfig(strategy_name, hp, scorers, repeats, seed)
-        evaluated[hyperparam_id(hp)] = report.score
+        hp_id = hyperparam_id(hp)
+        if hp_id in memo:
+            score, simulated = memo[hp_id]
+        else:
+            report = score_hyperconfig(strategy_name, hp, scorers, repeats,
+                                       seed, executor=executor)
+            score, simulated = report.score, report.simulated_seconds
+            memo[hp_id] = (score, simulated)
+            if journal is not None:
+                journal.append({"hp_id": hp_id, "hyperparams": hp,
+                                "score": score,
+                                "simulated_seconds": simulated,
+                                "done_wall": prior_wall
+                                + time.perf_counter() - t0})
+        evaluated[hp_id] = score
         if progress:
             progress(f"meta[{meta_strategy_name}] {strategy_name} "
-                     f"{hyperparam_id(hp)} -> {report.score:+.4f}")
+                     f"{hp_id} -> {score:+.4f}")
         # minimize negated score; charge the simulated cost of the campaign
-        return -report.score, report.simulated_seconds
+        return -score, simulated
 
     runner = FunctionRunner(space, objective, Budget(max_evals=max_hp_evals))
     meta = get_strategy(meta_strategy_name, **(meta_hyperparams or {}))
@@ -168,7 +253,7 @@ def meta_hypertune(strategy_name: str, meta_strategy_name: str,
     return MetaTuningResult(
         strategy_name, meta_strategy_name,
         space.as_dict(best.config), -best.value, evaluated,
-        list(runner.trace), time.perf_counter() - t0)
+        list(runner.trace), prior_wall + time.perf_counter() - t0)
 
 
 # ------------------------------------------------- meta-level methodology

@@ -190,38 +190,87 @@ class AggregateReport:
     simulated_seconds: float = 0.0
 
 
+@dataclasses.dataclass
+class RepeatResult:
+    """One (space, repeat) cell of the evaluation grid — the unit of work a
+    ``core.parallel.CampaignExecutor`` can fan out."""
+
+    curve: np.ndarray          # P_t (Eq. 2) sampled at this space's times
+    fresh_evals: int
+    wall_seconds: float
+    simulated_seconds: float
+
+
+def run_repeat(scorer: SpaceScorer, make_strategy: Callable[[], Strategy],
+               repeat: int, seed: int, times: np.ndarray,
+               baseline: np.ndarray) -> RepeatResult:
+    """Run one repeat of one space (one cell of Eq. 3's average) and score
+    its trace per Eq. 2. Self-contained and deterministic: the RNG is seeded
+    from ``(seed, repeat, space name)`` with a process-independent hash
+    (crc32 — str hash is randomized per interpreter), so cells compute
+    bit-identical curves whether executed serially, on a thread pool, or in
+    another process (paper Sec. III-C: simulation results are exactly
+    reproducible)."""
+    rng = random.Random((seed * 1_000_003 + repeat)
+                        ^ zlib.crc32(scorer.name.encode()))
+    runner = SimulationRunner(scorer.cache,
+                              Budget(max_seconds=scorer.budget_s))
+    strategy = make_strategy()
+    strategy.run(scorer.cache.space, runner, rng)
+    return RepeatResult(scorer.score_trace(runner.trace, times, baseline),
+                        runner.fresh_evals, runner.wall_seconds,
+                        runner.budget.spent_seconds)
+
+
+def _repeat_cell(ctx: tuple, si: int, r: int) -> RepeatResult:
+    """Executor task: ``ctx`` is the campaign-constant context shipped once
+    per worker (see ``CampaignExecutor.map(shared=...)``)."""
+    scorers, make_strategy, seed, times, baselines = ctx
+    return run_repeat(scorers[si], make_strategy, r, seed, times[si],
+                      baselines[si])
+
+
 def evaluate_strategy(make_strategy: Callable[[], Strategy],
                       scorers: Sequence[SpaceScorer],
                       repeats: int = 25,
                       n_samples: int = DEFAULT_SAMPLES,
-                      seed: int = 0) -> AggregateReport:
+                      seed: int = 0,
+                      executor=None) -> AggregateReport:
     """Run a strategy ``repeats`` times on every space in simulation mode and
-    aggregate performance curves per Eq. 3."""
+    aggregate performance curves per Eq. 3.
+
+    ``executor``: optional ``core.parallel.CampaignExecutor``; the
+    (space × repeat) grid is fanned out and reduced in fixed space-major
+    order, so the aggregate is bit-identical to the serial loop.
+    """
     names = [s.name for s in scorers]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate space names in scorers: {names}")
+    times = [s.sample_times(n_samples) for s in scorers]
+    baselines = [s.baseline_at_time(t) for s, t in zip(scorers, times)]
+    cells_idx = [(si, r) for si in range(len(scorers)) for r in range(repeats)]
+    cells: list[RepeatResult | None] = [None] * len(cells_idx)
+    if executor is not None and executor.parallel:
+        ctx = (tuple(scorers), make_strategy, seed, times, baselines)
+        for i, res in executor.map(_repeat_cell, cells_idx, shared=ctx):
+            cells[i] = res
+    else:
+        for i, (si, r) in enumerate(cells_idx):
+            cells[i] = run_repeat(scorers[si], make_strategy, r, seed,
+                                  times[si], baselines[si])
     per_space: dict[str, np.ndarray] = {}
     per_space_score: dict[str, float] = {}
     fresh = 0
     wall = 0.0
     simulated = 0.0
-    for scorer in scorers:
-        times = scorer.sample_times(n_samples)
-        baseline = scorer.baseline_at_time(times)
+    for si, scorer in enumerate(scorers):
         acc = np.zeros(n_samples)
         for r in range(repeats):
-            # stable per-(space, repeat, seed) rng — crc32 is process-
-            # independent (str hash is randomized per interpreter)
-            rng = random.Random((seed * 1_000_003 + r)
-                                ^ zlib.crc32(scorer.name.encode()))
-            runner = SimulationRunner(scorer.cache,
-                                      Budget(max_seconds=scorer.budget_s))
-            strategy = make_strategy()
-            strategy.run(scorer.cache.space, runner, rng)
-            acc += scorer.score_trace(runner.trace, times, baseline)
-            fresh += runner.fresh_evals
-            wall += runner.wall_seconds
-            simulated += runner.budget.spent_seconds
+            cell = cells[si * repeats + r]
+            acc += cell.curve
+            fresh += cell.fresh_evals
+            wall += cell.wall_seconds
+            simulated += cell.simulated_seconds
         curve = acc / repeats
         per_space[scorer.name] = curve
         per_space_score[scorer.name] = float(curve.mean())

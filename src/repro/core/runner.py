@@ -19,6 +19,10 @@ charges nothing (Kernel Tuner cache semantics; see budget.py).
 Every fresh evaluation is appended to ``trace`` as
 ``(cumulative_simulated_seconds, objective_value, config)`` — the methodology
 computes best-so-far performance curves from this.
+
+Runners are single-run state (memo, budget, trace) and are NOT shared across
+threads: parallel campaigns (``core.parallel``) construct one runner per
+(space, repeat) task — see ``methodology.run_repeat``.
 """
 from __future__ import annotations
 

@@ -2,7 +2,7 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, st
 
 from repro.core.searchspace import SearchSpace
 from repro.core.tunable import Constraint, Tunable, tunables_from_dict
