@@ -9,6 +9,8 @@
   fig8      extended (non-exhaustive) tuning with a meta-strategy
             (the paper's 204.7 % claim)
   fig9      live-vs-simulation cost (the ~130× speedup claim)
+  record    measured record→replay speedup on a live Pallas space
+            (bit-identical trajectory, wall-clock both sides)
   roofline  per-cell roofline table from the dry-run artifacts
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--workers N] [names...]
@@ -38,7 +40,8 @@ def main() -> None:
 
     # import after REPRO_WORKERS is set: common reads it at import time
     from . import (fig2_violins, fig3_generalization, fig5_curves, fig6_meta,
-                   fig8_extended, fig9_speedup, roofline_table, table2_hub)
+                   fig8_extended, fig9_speedup, record_replay, roofline_table,
+                   table2_hub)
     all_benches = {
         "table2": table2_hub.main,
         "fig2": fig2_violins.main,
@@ -47,6 +50,7 @@ def main() -> None:
         "fig6": fig6_meta.main,
         "fig8": fig8_extended.main,
         "fig9": fig9_speedup.main,
+        "record": record_replay.main,
         "roofline": roofline_table.main,
     }
     names = args.names or list(all_benches)

@@ -12,9 +12,18 @@ One entry point for the paper's workflow, replacing the ad-hoc scripts in
              Table IV / Eq. 4), journaled for resume
   report     inspect a campaign journal: ranking, optimal-vs-average
              improvement (the 94.8 % metric), wall-clock parallelism
+  record     strategy-sample a registered Pallas kernel (live interpret
+             mode or cost model) across parallel workers and emit a
+             replayable T4 cache — producing the FAIR data the simulation
+             mode consumes (Sec. III-C/D)
+  bruteforce exhaustively record a registered kernel's whole valid space
+             (the paper's Table II hub-building runs), resumable per shard
+  merge-cache fold recording shards (from crashed/partial/parallel runs)
+             into one canonical cache file
 
 Search spaces come either from the benchmark hub (``--kernels/--devices``
-or ``--split``, Sec. III-D) or from explicit T4 cache files (``--cache``).
+or ``--split``, Sec. III-D) or from explicit T4 cache files (``--cache``)
+— including caches produced by ``record``/``bruteforce``.
 """
 from __future__ import annotations
 
@@ -215,6 +224,92 @@ def cmd_report(args) -> int:
     return 0
 
 
+def _record_out_paths(args) -> tuple[str, str]:
+    """(cache path, shard prefix) for a recording run."""
+    out = args.out
+    if out is None:
+        out = os.path.join("recorded", f"{args.kernel}@{args.device}.json.gz")
+    prefix = out
+    for ext in (".json.zst", ".json.gz", ".json"):
+        if prefix.endswith(ext):
+            prefix = prefix[:-len(ext)]
+            break
+    return out, prefix
+
+
+def _run_recording(args, task_fn, mode: str) -> int:
+    """Shared driver for ``record``/``bruteforce``: fan one shard per worker
+    out over a CampaignExecutor, then merge shards into the output cache."""
+    from .core import record as rec
+    from .kernels import get_kernel
+
+    try:
+        get_kernel(args.kernel)  # fail fast on unknown kernels
+    except KeyError as e:
+        raise SystemExit(f"error: {e.args[0]}")
+    problem = _parse_hyperparams(getattr(args, "problem", None))
+    spec = rec.RecordSpec.create(
+        args.kernel, runner=args.runner, device=args.device, problem=problem,
+        strategy=getattr(args, "strategy", "random_search"),
+        hyperparams=_parse_hyperparams(getattr(args, "hyperparams", None)),
+        repeats=args.repeats, max_evals=args.max_evals,
+        max_seconds=args.seconds, seed=args.seed)
+    out, prefix = _record_out_paths(args)
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    n = max(1, args.workers)
+    t0 = time.perf_counter()
+    argtuples = [(w, n, prefix) for w in range(n)]
+    with CampaignExecutor(args.workers, args.backend) as ex:
+        for _, summary in ex.map(task_fn, argtuples, shared=spec):
+            print(f"  worker {summary['worker']}: {summary['recorded']} "
+                  f"recorded (+{summary['resumed']} resumed), "
+                  f"{summary['measured_seconds']:.2f} s measured "
+                  f"-> {summary['path']}", flush=True)
+    wall = time.perf_counter() - t0
+    space = rec.registry_space(args.kernel, problem)
+    cache = rec.merge_shards([rec.shard_path(prefix, w) for w in range(n)],
+                             space=space, meta={"mode": mode})
+    cache.save(out)
+    n_ok = cache.meta["n_ok"]
+    total = space.size if space is not None else len(cache.results)
+    print(f"{mode}: {len(cache.results)}/{total} configs recorded "
+          f"({n_ok} ok) for {args.kernel}@{args.device} "
+          f"[{args.runner}] in {wall:.1f} s wall ({n} workers)")
+    print(f"cache: {out}")
+    print(f"replay: python -m repro simulate --strategy random_search "
+          f"--cache {out}")
+    return 0
+
+
+def cmd_record(args) -> int:
+    """Strategy-sampled recording of a registered kernel (the affordable
+    way to turn a live space into simulation data)."""
+    from .core.record import record_shard_task
+    return _run_recording(args, record_shard_task, "record")
+
+
+def cmd_bruteforce(args) -> int:
+    """Exhaustive recording (paper Table II: brute-forcing the hub)."""
+    from .core.record import bruteforce_shard_task
+    return _run_recording(args, bruteforce_shard_task, "bruteforce")
+
+
+def cmd_merge_cache(args) -> int:
+    """Merge recording shards into one canonical cache file."""
+    from .core import record as rec
+    header, _ = rec.ObservationShard(args.shards[0]).read()
+    if header is None:
+        raise SystemExit(f"{args.shards[0]} has no shard header")
+    space = rec.registry_space(header.get("kernel", ""),
+                               header.get("problem"))
+    cache = rec.merge_shards(args.shards, space=space)
+    cache.save(args.out)
+    print(f"merged {cache.meta['n_shards']} shards -> {args.out}: "
+          f"{cache.meta['n_configs']} configs ({cache.meta['n_ok']} ok) "
+          f"for {cache.kernel}@{cache.device}")
+    return 0
+
+
 def _print_ranking(results: dict, top: int) -> None:
     ranked = sorted(results.items(), key=lambda kv: -kv[1].score)
     for hp_id, r in ranked[:top]:
@@ -275,6 +370,65 @@ def build_parser() -> argparse.ArgumentParser:
                     help="path to a campaign JSONL journal")
     pr.add_argument("--top", type=int, default=10)
     pr.set_defaults(fn=cmd_report)
+
+    def _add_record_args(pp, bruteforce: bool) -> None:
+        pp.add_argument("--kernel", required=True,
+                        help="registered kernel (gemm, convolution, "
+                             "dedispersion, hotspot, flash_attention, ssd)")
+        pp.add_argument("--runner", choices=("live", "costmodel"),
+                        default=("costmodel" if bruteforce else "live"),
+                        help="live = Pallas interpret mode on this host; "
+                             "costmodel = analytic device model")
+        pp.add_argument("--device",
+                        default=("tpu_v5e" if bruteforce else "cpu_interpret"),
+                        help="device model for --runner costmodel; a label "
+                             "recorded in the cache otherwise")
+        pp.add_argument("--problem", default=None, metavar="K=V,...",
+                        help="problem-size overrides (e.g. m=256,n=256,"
+                             "k=256); default: the kernel's smoke sizes")
+        pp.add_argument("--repeats", type=int, default=3,
+                        help="observations per fresh live evaluation")
+        if not bruteforce:
+            pp.add_argument("--strategy", default="random_search",
+                            choices=sorted(STRATEGIES),
+                            help="sampling strategy (default random_search)")
+            pp.add_argument("--hyperparams", default=None, metavar="K=V,...")
+        pp.add_argument("--max-evals", type=int,
+                        default=(None if bruteforce else 64),
+                        help="fresh-evaluation cap per worker"
+                             + (" (default unlimited)" if bruteforce
+                                else " (default 64)"))
+        pp.add_argument("--seconds", type=float, default=None,
+                        help="measured-seconds cap per worker")
+        pp.add_argument("--out", default=None, metavar="PATH",
+                        help="output cache (.json/.json.gz/.json.zst; "
+                             "default recorded/<kernel>@<device>.json.gz). "
+                             "Shards land next to it and survive crashes: "
+                             "rerun the same command to resume.")
+        pp.add_argument("--workers", type=int, default=1,
+                        help="parallel recording workers (one shard each)")
+        pp.add_argument("--backend", choices=("auto", "thread", "process"),
+                        default="auto")
+        pp.add_argument("--seed", type=int, default=0)
+
+    prec = sub.add_parser("record", help="record a live/cost-model tuning "
+                          "run of a registered kernel into a replayable "
+                          "cache (strategy-sampled)")
+    _add_record_args(prec, bruteforce=False)
+    prec.set_defaults(fn=cmd_record)
+
+    pbf = sub.add_parser("bruteforce", help="exhaustively record a "
+                         "registered kernel's valid space (Table II)")
+    _add_record_args(pbf, bruteforce=True)
+    pbf.set_defaults(fn=cmd_bruteforce)
+
+    pmc = sub.add_parser("merge-cache", help="merge recording shards into "
+                         "one canonical T4 cache")
+    pmc.add_argument("shards", nargs="+", metavar="SHARD",
+                     help="shard JSONL files (from record/bruteforce)")
+    pmc.add_argument("--out", required=True, metavar="PATH",
+                     help="output cache path (.json/.json.gz/.json.zst)")
+    pmc.set_defaults(fn=cmd_merge_cache)
     return p
 
 

@@ -17,7 +17,7 @@ import dataclasses
 import gzip
 import json
 import os
-from typing import Mapping
+from typing import Mapping, Sequence
 
 try:  # optional: zstd gives the best ratio, but the stdlib must suffice
     import zstandard
@@ -89,6 +89,43 @@ class CachedResult:
         return self.compile_s + sum(self.times_s) + self.overhead_s
 
 
+def result_to_json(r: CachedResult) -> dict:
+    """The T4-mini JSON form of one result (shared by cache files and
+    recording shards: one schema, one reader/writer pair)."""
+    return {
+        "status": r.status,
+        "time_s": (r.time_s if r.time_s != float("inf") else None),
+        "times_s": list(r.times_s),
+        "compile_s": r.compile_s,
+        "overhead_s": r.overhead_s,
+    }
+
+
+def result_from_json(d: Mapping) -> CachedResult:
+    return CachedResult(
+        status=d["status"],
+        time_s=(float("inf") if d["time_s"] is None else d["time_s"]),
+        times_s=tuple(d["times_s"]),
+        compile_s=d["compile_s"],
+        overhead_s=d.get("overhead_s", 0.0),
+    )
+
+
+def membership_space(kernel: str, device: str,
+                     tunables: Mapping[str, Sequence],
+                     present: Sequence[str]) -> SearchSpace:
+    """Reconstruct a search space whose validity predicate is membership in
+    the recorded/brute-forced result set. Static constraints excluded
+    configs from the brute force entirely, so membership in the results
+    *is* the original validity predicate (runtime failures are present with
+    status "error" — they belong to the space)."""
+    tun = tuple(Tunable(n, tuple(v)) for n, v in tunables.items())
+    member = Constraint(_Membership(tuple(tunables.keys()),
+                                    frozenset(present)),
+                        "config present in recorded results")
+    return SearchSpace(tun, (member,), name=f"{kernel}@{device}")
+
+
 class CacheFile:
     """In-memory view of one brute-forced search space (kernel × device)."""
 
@@ -104,6 +141,22 @@ class CacheFile:
     def lookup(self, config: Config) -> CachedResult:
         return self.results[self.space.config_id(config)]
 
+    def insert(self, key: str, result: CachedResult,
+               overwrite: bool = False) -> None:
+        """Add one observation under its ``space.config_id`` key.
+
+        Recorded caches are built incrementally (shards of a live tuning run
+        fold in one observation at a time); re-inserting an existing key with
+        a different result raises unless ``overwrite`` — silently keeping one
+        of two conflicting measurements would corrupt the replay.
+        """
+        prior = self.results.get(key)
+        if prior is not None and prior != result and not overwrite:
+            raise ValueError(
+                f"cache {self.kernel}@{self.device} already holds a "
+                f"different result for config {key!r}")
+        self.results[key] = result
+
     @property
     def ok_values(self) -> list:
         return [r.time_s for r in self.results.values() if r.status == "ok"]
@@ -112,12 +165,21 @@ class CacheFile:
     def optimum(self) -> float:
         vals = self.ok_values
         if not vals:
-            raise ValueError("no valid results in cache")
+            raise ValueError(
+                f"cache {self.kernel}@{self.device} has no successful "
+                f"results ({len(self.results)} recorded, all "
+                f"{'errors' if self.results else 'missing'}); "
+                "a partial recording must cover at least one ok config "
+                "before it can be replayed")
         return min(vals)
 
     def mean_eval_charge(self) -> float:
         """Average simulated cost of one fresh evaluation — used for the
         calculated random-search baseline's time axis."""
+        if not self.results:
+            raise ValueError(
+                f"cache {self.kernel}@{self.device} is empty (no recorded "
+                "evaluations); record or brute-force the space first")
         charges = [r.charge_s for r in self.results.values()]
         return sum(charges) / len(charges)
 
@@ -132,16 +194,8 @@ class CacheFile:
             "tunables": {t.name: list(t.values) for t in self.space.tunables},
             "constraints": [c.description for c in self.space.constraints],
             "meta": self.meta,
-            "results": {
-                key: {
-                    "status": r.status,
-                    "time_s": (r.time_s if r.time_s != float("inf") else None),
-                    "times_s": list(r.times_s),
-                    "compile_s": r.compile_s,
-                    "overhead_s": r.overhead_s,
-                }
-                for key, r in self.results.items()
-            },
+            "results": {key: result_to_json(r)
+                        for key, r in self.results.items()},
         }
 
     def save(self, path: str) -> None:
@@ -161,25 +215,8 @@ class CacheFile:
         if d.get("format") != "T4-mini":
             raise ValueError(f"unknown cache format {d.get('format')!r}")
         if space is None:
-            # Reconstruct the space. Static constraints excluded configs from
-            # the brute force entirely, so membership in `results` *is* the
-            # original validity predicate (runtime failures are present with
-            # status "error" — they belong to the space).
-            tunables = tuple(Tunable(n, tuple(v)) for n, v in d["tunables"].items())
-            names = tuple(d["tunables"].keys())
-            present = frozenset(d["results"].keys())
-            member = Constraint(_Membership(names, present),
-                                "config present in brute-forced results")
-            space = SearchSpace(tunables, (member,),
-                                name=f"{d['kernel']}@{d['device']}")
-        results = {
-            key: CachedResult(
-                status=r["status"],
-                time_s=(float("inf") if r["time_s"] is None else r["time_s"]),
-                times_s=tuple(r["times_s"]),
-                compile_s=r["compile_s"],
-                overhead_s=r.get("overhead_s", 0.0),
-            )
-            for key, r in d["results"].items()
-        }
+            space = membership_space(d["kernel"], d["device"], d["tunables"],
+                                     d["results"].keys())
+        results = {key: result_from_json(r)
+                   for key, r in d["results"].items()}
         return CacheFile(d["kernel"], d["device"], space, results, d.get("meta"))

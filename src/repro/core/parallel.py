@@ -233,10 +233,15 @@ class CampaignJournal:
     Resuming with different campaign settings raises, because mixing scores
     across methodologies would silently corrupt the comparison (Sec. III-B
     requires all scores to share baseline, budget, and repeats).
+
+    ``fmt`` is the value of the header's ``format`` field; other append-only
+    JSONL files (e.g. ``core.record``'s observation shards) reuse the same
+    durability machinery under their own format tag.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, fmt: str = JOURNAL_FORMAT):
         self.path = path
+        self.fmt = fmt
 
     # -------------------------------------------------------------- reading
     def read(self) -> tuple[dict | None, list[dict]]:
@@ -255,15 +260,16 @@ class CampaignJournal:
                 except json.JSONDecodeError:
                     if header is None:  # binary/foreign file, not a journal
                         raise ValueError(
-                            f"{self.path} is not a campaign journal")
+                            f"{self.path} is not a {self.fmt} file")
                     # a line torn by an interrupted write (``append`` starts
                     # every record on a fresh line, so complete records are
                     # always intact lines) — skip it, keep later records
                     continue
                 if header is None:
-                    if d.get("format") != JOURNAL_FORMAT:
+                    if d.get("format") != self.fmt:
                         raise ValueError(
-                            f"{self.path} is not a campaign journal")
+                            f"{self.path} is not a {self.fmt} file "
+                            f"(found format {d.get('format')!r})")
                     header = d
                 else:
                     records.append(d)
@@ -275,7 +281,7 @@ class CampaignJournal:
         existing, records = self.read()
         if existing is None:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-            self.append(dict(header, format=JOURNAL_FORMAT,
+            self.append(dict(header, format=self.fmt,
                              version=JOURNAL_VERSION))
             return []
         volatile = {"format", "version", "created_unix"}

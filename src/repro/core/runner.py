@@ -16,6 +16,12 @@ Three runners implement the same protocol (paper Fig. 1 / Sec. III-E):
 All runners memoize: re-evaluating a config returns the cached observation and
 charges nothing (Kernel Tuner cache semantics; see budget.py).
 
+Observations carry their full ``CachedResult`` detail (raw repeats,
+compile/run split), so any runner can be wrapped in a
+``core.record.RecordingRunner`` to persist a live run as a replayable cache
+— and because the charge is always ``result.charge_s``, the replay's
+simulated-time axis matches the recording bit-for-bit.
+
 Every fresh evaluation is appended to ``trace`` as
 ``(cumulative_simulated_seconds, objective_value, config)`` — the methodology
 computes best-so-far performance curves from this.
@@ -46,6 +52,9 @@ class Observation:
     value: float               # objective (mean time_s); inf when failed
     status: str                # "ok" | "error"
     charge_s: float            # simulated seconds charged
+    # full T4-style detail (raw repeats, compile/run split) — what a
+    # RecordingRunner persists so a live run replays bit-identically
+    result: CachedResult | None = None
 
 
 class Runner:
@@ -60,8 +69,11 @@ class Runner:
         self.wall_start = time.perf_counter()
 
     # subclasses implement this
-    def _evaluate(self, config: Config) -> tuple[float, str, float]:
-        """Returns (value, status, charge_seconds)."""
+    def _evaluate(self, config: Config) -> "CachedResult | tuple[float, str, float]":
+        """Returns a full ``CachedResult`` (preferred: recordable and
+        replayable with exact time accounting) or a bare
+        ``(value, status, charge_seconds)`` tuple for objectives with no
+        compile/run split (e.g. the meta level's campaign scores)."""
         raise NotImplementedError
 
     def run(self, config: Config) -> Observation:
@@ -70,10 +82,17 @@ class Runner:
         if hit is not None:
             return hit
         self.budget.check()  # raises BudgetExhausted when spent
-        value, status, charge = self._evaluate(config)
+        out = self._evaluate(config)
+        if isinstance(out, CachedResult):
+            result = out
+            value, status, charge = out.time_s, out.status, out.charge_s
+        else:
+            value, status, charge = out
+            # degenerate detail: the whole charge attributed to compile
+            result = CachedResult(status, value, (), charge)
         self.budget.charge(charge)
         self.fresh_evals += 1
-        obs = Observation(config, value, status, charge)
+        obs = Observation(config, value, status, charge, result)
         self.memo[key] = obs
         self.trace.append((self.budget.spent_seconds, value, config))
         return obs
@@ -96,13 +115,14 @@ class SimulationRunner(Runner):
         super().__init__(cache.space, budget)
         self.cache = cache
 
-    def _evaluate(self, config: Config) -> tuple[float, str, float]:
+    def _evaluate(self, config: Config) -> CachedResult:
         try:
-            r: CachedResult = self.cache.lookup(config)
+            return self.cache.lookup(config)
         except KeyError:
-            # config outside the brute-forced set: treat as a failed compile
-            return INVALID, "error", self.cache.mean_eval_charge()
-        return r.time_s, r.status, r.charge_s
+            # config outside the brute-forced/recorded set: treat as a
+            # failed compile costing an average evaluation
+            return CachedResult("error", INVALID, (),
+                                self.cache.mean_eval_charge())
 
 
 class CostModelRunner(Runner):
@@ -112,11 +132,11 @@ class CostModelRunner(Runner):
         self.workload = workload
         self.device = device
 
-    def _evaluate(self, config: Config) -> tuple[float, str, float]:
+    def _evaluate(self, config: Config) -> CachedResult:
         cid = self.space.config_id(config)
         est = estimate(self.workload, self.space.as_dict(config), self.device, cid)
-        charge = est.compile_s + sum(est.times_s) + self.device.overhead_s
-        return est.time_s, est.status, charge
+        return CachedResult(est.status, est.time_s, tuple(est.times_s),
+                            est.compile_s, self.device.overhead_s)
 
 
 class LiveRunner(Runner):
@@ -128,18 +148,20 @@ class LiveRunner(Runner):
         self.fn = fn
         self.repeats = repeats
 
-    def _evaluate(self, config: Config) -> tuple[float, str, float]:
+    def _evaluate(self, config: Config) -> CachedResult:
         d = self.space.as_dict(config)
         t0 = time.perf_counter()
         try:
             self.fn(d)  # warmup/compile
+            compile_s = time.perf_counter() - t0
             times = []
             for _ in range(self.repeats):
                 t1 = time.perf_counter()
                 self.fn(d)
                 times.append(time.perf_counter() - t1)
-            value = sum(times) / len(times)
-            status = "ok"
+            return CachedResult("ok", sum(times) / len(times), tuple(times),
+                                compile_s)
         except Exception:
-            value, status = INVALID, "error"
-        return value, status, time.perf_counter() - t0
+            # a failed compile/run still cost the measured wall time
+            return CachedResult("error", INVALID, (),
+                                time.perf_counter() - t0)

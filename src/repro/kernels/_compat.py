@@ -1,0 +1,19 @@
+"""Pallas API compatibility across jax versions.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and for
+a window of releases ships both, one as a deprecated alias). The kernels in
+this package only pass ``dimension_semantics``, which both spellings accept,
+so a single resolved name keeps every kernel importable on any installed jax
+— the live-tuning path the recorder depends on must not rot with the
+toolchain.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:  # older jax (e.g. 0.4.x): pre-rename spelling
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 from ..core.costmodel import KernelWorkload, alignment_eff, dma_eff
 from ..core.devices import DeviceModel
 from ..core.searchspace import SearchSpace
@@ -29,6 +31,9 @@ from ..core.tunable import Constraint, tunables_from_dict
 # Hub problem: 4096×4096 image, 17×17 filter (Kernel Tuner's conv benchmark)
 HUB_H, HUB_W, HUB_FH, HUB_FW = 4096, 4096, 17, 17
 BYTES = 4  # fp32 image
+
+# Recording problem size (CPU interpret-mode live tuning)
+SMOKE_PROBLEM = {"h": 128, "w": 256, "fh": 7, "fw": 7}
 
 
 # ----------------------------------------------------------------- kernel
@@ -83,7 +88,7 @@ def conv2d(x: jax.Array, f: jax.Array, *, strip_h: int = 64,
         ],
         out_specs=pl.BlockSpec((1, strip_h, block_w), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n_i * n_j, strip_h, block_w), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(patches, f)
@@ -102,6 +107,24 @@ def conv2d_ref(x: jax.Array, f: jax.Array, **_unused) -> jax.Array:
         for dx in range(fw):
             acc += xp[dy:dy + x.shape[0], dx:dx + x.shape[1]].astype(jnp.float32) * f[dy, dx]
     return acc.astype(x.dtype)
+
+
+# ----------------------------------------------------------- live recording
+def make_live(problem: Mapping | None = None):
+    """Recorder callable: same-padded conv on a fixed image/filter; the
+    unroll/vector/accumulator tunables are cost-model-only."""
+    p = {**SMOKE_PROBLEM, **(problem or {})}
+    x = jax.random.normal(jax.random.PRNGKey(p.get("seed", 1)),
+                          (p["h"], p["w"]), jnp.float32)
+    f = jax.random.normal(jax.random.PRNGKey(p.get("seed", 1) + 1),
+                          (p["fh"], p["fw"]), jnp.float32)
+
+    def fn(conf: Mapping) -> None:
+        out = conv2d(x, f, strip_h=conf["strip_h"], block_w=conf["block_w"],
+                     interpret=True)
+        jax.block_until_ready(out)
+
+    return fn
 
 
 # ------------------------------------------------------------ search space

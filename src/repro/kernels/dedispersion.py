@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 from ..core.costmodel import KernelWorkload, alignment_eff, dma_eff
 from ..core.devices import DeviceModel
 from ..core.searchspace import SearchSpace
@@ -29,6 +31,10 @@ from ..core.tunable import Constraint, tunables_from_dict
 HUB_NCHAN, HUB_NTIME, HUB_NDM = 256, 16384, 256
 BYTES = 4
 MAX_DELAY = 512  # delay table values are in [0, MAX_DELAY)
+
+# Recording problem size (CPU interpret-mode live tuning); ntime includes
+# the MAX_DELAY halo the wrapper slices off
+SMOKE_PROBLEM = {"nchan": 32, "ntime": 768 + MAX_DELAY, "ndm": 24}
 
 
 def make_delays(nchan: int = HUB_NCHAN, ndm: int = HUB_NDM,
@@ -99,7 +105,7 @@ def dedisperse(x: jax.Array, delays: jax.Array, *, block_dm: int = 32,
         ],
         out_specs=pl.BlockSpec((block_dm, block_t), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((ndm, nt_out), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(delays, strips)[:ndm0, :nt_out0]
@@ -121,6 +127,23 @@ def dedisperse_ref(x: jax.Array, delays: jax.Array, **_unused) -> jax.Array:
 
     out = jax.vmap(one_dm)(jnp.arange(ndm))
     return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------- live recording
+def make_live(problem: Mapping | None = None):
+    """Recorder callable: fixed signal + delay table; chan_chunk/layout/
+    unroll tunables are cost-model-only."""
+    p = {**SMOKE_PROBLEM, **(problem or {})}
+    x = jax.random.normal(jax.random.PRNGKey(p.get("seed", 5)),
+                          (p["nchan"], p["ntime"]), jnp.float32)
+    delays = make_delays(p["nchan"], p["ndm"])
+
+    def fn(conf: Mapping) -> None:
+        out = dedisperse(x, delays, block_dm=conf["block_dm"],
+                         block_t=conf["block_t"], interpret=True)
+        jax.block_until_ready(out)
+
+    return fn
 
 
 # ------------------------------------------------------------ search space

@@ -22,12 +22,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 from ..core.costmodel import KernelWorkload, alignment_eff
 from ..core.devices import DeviceModel
 from ..core.searchspace import SearchSpace
 from ..core.tunable import Constraint, tunables_from_dict
 
 NEG_INF = -1e30
+
+# Recording problem size (CPU interpret-mode live tuning): 4 q heads over a
+# GQA group of 2, short sequence
+SMOKE_PROBLEM = {"bh": 4, "bh_kv": 2, "seq": 256, "d": 64}
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -110,7 +116,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
@@ -141,6 +147,24 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ------------------------------------------------------------ search space
+def make_live(problem: Mapping | None = None):
+    """Recorder callable: causal GQA attention on fixed q/k/v; the
+    accumulator-dtype tunable is cost-model-only."""
+    p = {**SMOKE_PROBLEM, **(problem or {})}
+    ks = jax.random.split(jax.random.PRNGKey(p.get("seed", 6)), 3)
+    q = jax.random.normal(ks[0], (p["bh"], p["seq"], p["d"]), jnp.float32)
+    k = jax.random.normal(ks[1], (p["bh_kv"], p["seq"], p["d"]), jnp.float32)
+    v = jax.random.normal(ks[2], (p["bh_kv"], p["seq"], p["d"]), jnp.float32)
+
+    def fn(conf: Mapping) -> None:
+        out = flash_attention(q, k, v, block_q=conf["block_q"],
+                              block_kv=conf["block_kv"], causal=True,
+                              interpret=True)
+        jax.block_until_ready(out)
+
+    return fn
+
+
 def space(seq: int = 4096, d: int = 128) -> SearchSpace:
     tunables = tunables_from_dict({
         "block_q": (64, 128, 256, 512, 1024),

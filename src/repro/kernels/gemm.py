@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 from ..core.costmodel import KernelWorkload, alignment_eff, dma_eff
 from ..core.devices import DeviceModel
 from ..core.searchspace import SearchSpace
@@ -28,6 +30,10 @@ from ..core.tunable import tunables_from_dict
 # Hub problem size (dense square GEMM, bf16 in / fp32 accumulate)
 HUB_M, HUB_N, HUB_K = 4096, 4096, 4096
 BYTES = 2  # bf16
+
+# Recording problem size: small enough that a CPU interpret-mode evaluation
+# takes milliseconds, so live-recording a tuning run is affordable
+SMOKE_PROBLEM = {"m": 128, "n": 128, "k": 128}
 
 
 # ----------------------------------------------------------------- kernel
@@ -79,7 +85,7 @@ def gemm(a: jax.Array, b: jax.Array, c0: jax.Array, *, block_m: int = 128,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, c0)[:m0, :n0]
@@ -91,6 +97,26 @@ def gemm_ref(a: jax.Array, b: jax.Array, c0: jax.Array, *, alpha: float = 1.0,
     """Pure-jnp oracle."""
     acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
     return (alpha * acc + beta * c0.astype(jnp.float32)).astype(a.dtype)
+
+
+# ----------------------------------------------------------- live recording
+def make_live(problem: Mapping | None = None):
+    """Interpret-mode evaluation callable for the recorder: fixed inputs,
+    ``fn(config_dict)`` runs the Pallas kernel with that tiling and blocks
+    until ready. Tunables the TPU wrapper does not consume (grid order,
+    accumulator dtype) are cost-model-only and ignored here."""
+    p = {**SMOKE_PROBLEM, **(problem or {})}
+    ks = jax.random.split(jax.random.PRNGKey(p.get("seed", 0)), 3)
+    a = jax.random.normal(ks[0], (p["m"], p["k"]), jnp.float32).astype(jnp.bfloat16)
+    b = jax.random.normal(ks[1], (p["k"], p["n"]), jnp.float32).astype(jnp.bfloat16)
+    c0 = jax.random.normal(ks[2], (p["m"], p["n"]), jnp.float32).astype(jnp.bfloat16)
+
+    def fn(conf: Mapping) -> None:
+        out = gemm(a, b, c0, block_m=conf["block_m"], block_n=conf["block_n"],
+                   block_k=conf["block_k"], interpret=True)
+        jax.block_until_ready(out)
+
+    return fn
 
 
 # ------------------------------------------------------------ search space

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 from ..core.costmodel import KernelWorkload, alignment_eff, dma_eff
 from ..core.devices import DeviceModel
 from ..core.searchspace import SearchSpace
@@ -28,6 +30,9 @@ from ..core.tunable import Constraint, tunables_from_dict
 HUB_H, HUB_W = 4096, 4096
 HUB_STEPS = 16           # timesteps per hub measurement
 BYTES = 4                # fp32 grids
+
+# Recording problem size (CPU interpret-mode live tuning)
+SMOKE_PROBLEM = {"h": 64, "w": 128}
 # physical coefficients (Rodinia-style, folded constants)
 C_CENTER, C_NEIGH, C_POWER = 0.6, 0.1, 0.5
 
@@ -93,7 +98,7 @@ def hotspot(temp: jax.Array, power: jax.Array, *, strip_h: int = 64,
         ],
         out_specs=pl.BlockSpec((1, strip_h, block_w), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n_tiles, strip_h, block_w), temp.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(ts, ps)
@@ -113,6 +118,26 @@ def hotspot_ref(temp: jax.Array, power: jax.Array, *, t_block: int = 1,
         pp = jnp.pad(p, 1, mode="wrap")
         t = _stencil_once(tp, pp)
     return t.astype(temp.dtype)
+
+
+# ----------------------------------------------------------- live recording
+def make_live(problem: Mapping | None = None):
+    """Recorder callable: ``t_block`` fused stencil steps on a fixed grid.
+    Constraints bound to the problem size (divisibility, pyramid halo) are
+    enforced by ``space(h, w)``; dtype/grid-order tunables are
+    cost-model-only."""
+    p = {**SMOKE_PROBLEM, **(problem or {})}
+    t = jax.random.normal(jax.random.PRNGKey(p.get("seed", 3)),
+                          (p["h"], p["w"]), jnp.float32)
+    pw = jax.random.normal(jax.random.PRNGKey(p.get("seed", 3) + 1),
+                           (p["h"], p["w"]), jnp.float32) * 0.1
+
+    def fn(conf: Mapping) -> None:
+        out = hotspot(t, pw, strip_h=conf["strip_h"], block_w=conf["block_w"],
+                      t_block=conf["t_block"], interpret=True)
+        jax.block_until_ready(out)
+
+    return fn
 
 
 # ------------------------------------------------------------ search space

@@ -25,10 +25,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 from ..core.costmodel import KernelWorkload, alignment_eff
 from ..core.devices import DeviceModel
 from ..core.searchspace import SearchSpace
 from ..core.tunable import Constraint, tunables_from_dict
+
+# Recording problem size (CPU interpret-mode live tuning)
+SMOKE_PROBLEM = {"bh": 4, "seq": 256, "p": 32, "n": 32}
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
@@ -100,7 +105,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a, b, c)
@@ -131,6 +136,25 @@ def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 
 
 # ------------------------------------------------------------ search space
+def make_live(problem: Mapping | None = None):
+    """Recorder callable: chunked SSD scan on fixed inputs; state_block and
+    accumulator-dtype tunables are cost-model-only."""
+    p = {**SMOKE_PROBLEM, **(problem or {})}
+    ks = jax.random.split(jax.random.PRNGKey(p.get("seed", 9)), 5)
+    bh, l = p["bh"], p["seq"]
+    x = jax.random.normal(ks[0], (bh, l, p["p"]), jnp.float32)
+    dt = jax.random.uniform(ks[1], (bh, l), jnp.float32, 0.001, 0.1)
+    a = -jax.random.uniform(ks[2], (bh,), jnp.float32, 0.5, 1.5)
+    b = jax.random.normal(ks[3], (bh, l, p["n"]), jnp.float32)
+    c = jax.random.normal(ks[4], (bh, l, p["n"]), jnp.float32)
+
+    def fn(conf: Mapping) -> None:
+        out = ssd_scan(x, dt, a, b, c, chunk=conf["chunk"], interpret=True)
+        jax.block_until_ready(out)
+
+    return fn
+
+
 def space(seq: int = 4096) -> SearchSpace:
     tunables = tunables_from_dict({
         "chunk": (32, 64, 128, 256, 512),
