@@ -1,0 +1,267 @@
+"""Simulation-engine benchmark: throughput of the replay/scoring hot path.
+
+Measures the array-backed engine against the in-tree scalar reference on a
+fixed profile and emits a machine-readable report (``--json`` /
+``BENCH_simulate.json`` at the repo root) that the CI ``bench`` job gates
+on. Components:
+
+  replay_fresh     full-space batch replay through ``SimulationRunner``
+                   (every evaluation fresh: gather + budget + trace)
+  replay_revisit   memo-hot replay (the dominant op in population
+                   campaigns: strategies revisit >90 % of evaluations)
+  score_trace      P_t curve sampling (Eq. 2) of a recorded trace
+  baseline_small   ``make_scorer`` on a recorded-cache-sized space (the
+                   1000-run virtual baseline dominates simulate cold-start)
+  campaign         hypertune-style scoring of a small GA+PSO hyperparameter
+                   set on hub spaces (end-to-end, warm)
+
+Every component reports vectorized and scalar wall clock plus their ratio
+(``speedup``). The ratio is what CI regresses against: it is measured on
+one host in one process, so it transfers across runner hardware, unlike
+absolute evals/sec (also recorded, for humans). ``score_checksum`` pins
+bit-exact scores: both engines must produce it, on every machine.
+
+Usage: PYTHONPATH=src python -m benchmarks.run bench --json BENCH_simulate.json
+(REPRO_FAST=1 shrinks repeats; the checksum then covers the fast profile.)
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import random
+import time
+
+import numpy as np
+
+from repro.core.budget import Budget
+from repro.core.cache import CachedResult, CacheFile
+from repro.core.methodology import evaluate_strategy, make_scorer
+from repro.core.runner import SimulationRunner
+from repro.core.searchspace import SearchSpace
+from repro.core.strategies import get_strategy
+from repro.core.tunable import tunables_from_dict
+
+from .common import FAST
+
+BENCH_FORMAT = "repro-bench-simulate"
+BENCH_VERSION = 1
+
+# the campaign component's hyperparameter set: a slice of the Table III
+# grids, small enough for CI, population-shaped so the batch step is on
+CAMPAIGN_SET = (
+    ("genetic_algorithm", {"popsize": 20, "maxiter": 100, "method": "uniform",
+                           "mutation_chance": 10}),
+    ("genetic_algorithm", {"popsize": 30, "maxiter": 50, "method": "two_point",
+                           "mutation_chance": 20}),
+    ("pso", {"popsize": 20, "maxiter": 100, "c1": 2.0, "c2": 1.0}),
+    ("pso", {"popsize": 30, "maxiter": 50, "c1": 1.0, "c2": 0.5}),
+    ("random_search", {}),
+)
+HUB_SELECTION = {"kernels": ["gemm", "hotspot"], "devices": ["tpu_v5e"]}
+REPEATS = 3 if FAST else 10
+SMALL_SPACE_N = 512
+
+
+def _hub_caches() -> list[CacheFile]:
+    from repro.core.dataset import DEFAULT_ROOT, load_hub
+    hub = load_hub(DEFAULT_ROOT, **HUB_SELECTION)
+    return [c for _, c in sorted(hub.items())]
+
+
+def _small_cache(n: int = SMALL_SPACE_N, seed: int = 7) -> CacheFile:
+    """Synthetic recorded-run-sized cache (what ``repro record`` produces),
+    including inf-valued failed configs."""
+    rng = np.random.default_rng(seed)
+    space = SearchSpace(tunables_from_dict({"x": tuple(range(n // 8)),
+                                            "y": tuple(range(8))}),
+                        name=f"bench{n}")
+    results = {}
+    vals = rng.lognormal(mean=-6, sigma=0.8, size=n)
+    fail = rng.random(n) < 0.05
+    for i, cfg in enumerate(space.valid_configs):
+        key = space.config_id(cfg)
+        if fail[i]:
+            results[key] = CachedResult("error", float("inf"), (), 0.4, 0.01)
+        else:
+            v = float(vals[i])
+            results[key] = CachedResult("ok", v, (v,) * 3, 0.3, 0.01)
+    return CacheFile(f"bench{n}", "synthetic", space, results)
+
+
+def _best_of(fn, repeat: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _component(wall_vec: float, wall_scalar: float, **extra) -> dict:
+    return {"wall_s": wall_vec, "wall_s_scalar": wall_scalar,
+            "speedup": wall_scalar / max(wall_vec, 1e-12), **extra}
+
+
+def bench_replay(cache: CacheFile) -> tuple[dict, dict]:
+    configs = cache.space.valid_configs
+    cache.columns  # build outside the timed region (one-time, amortized)
+
+    def fresh(columnar):
+        def go():
+            r = SimulationRunner(cache, Budget(max_seconds=float("inf")),
+                                 columnar=columnar)
+            r.run_batch(configs)
+        return go
+
+    w_vec = _best_of(fresh(True))
+    w_sca = _best_of(fresh(False))
+    fresh_c = _component(w_vec, w_sca,
+                         evals_per_sec=len(configs) / w_vec,
+                         evals_per_sec_scalar=len(configs) / w_sca,
+                         n_evals=len(configs))
+
+    def revisit(columnar):
+        r = SimulationRunner(cache, Budget(max_seconds=float("inf")),
+                             columnar=columnar)
+        r.run_batch(configs)  # warm the memo
+
+        def go():
+            r.run_batch(configs)
+        return go
+
+    w_vec = _best_of(revisit(True))
+    w_sca = _best_of(revisit(False))
+    revisit_c = _component(w_vec, w_sca,
+                           evals_per_sec=len(configs) / w_vec,
+                           evals_per_sec_scalar=len(configs) / w_sca,
+                           n_evals=len(configs))
+    return fresh_c, revisit_c
+
+
+def bench_score_trace(cache: CacheFile) -> dict:
+    sc_vec = make_scorer(cache, engine="vectorized")
+    sc_sca = make_scorer(cache, engine="scalar")
+    times = sc_vec.sample_times()
+    baseline = sc_vec.baseline_at_time(times)
+    # a recorded random-search trace: replay a permutation to budget
+    runner = SimulationRunner(cache, Budget(max_seconds=sc_vec.budget_s))
+    get_strategy("random_search").run(cache.space, runner, random.Random(0))
+    trace = runner.trace
+    calls = 200
+
+    def go(sc):
+        def run():
+            for _ in range(calls):
+                sc.score_trace(trace, times, baseline)
+        return run
+
+    w_vec = _best_of(go(sc_vec))
+    w_sca = _best_of(go(sc_sca))
+    return _component(w_vec, w_sca, calls_per_sec=calls / w_vec,
+                      calls_per_sec_scalar=calls / w_sca,
+                      trace_len=len(trace))
+
+
+def bench_baseline_small() -> dict:
+    w_vec = _best_of(lambda: make_scorer(_small_cache(), engine="vectorized"))
+    w_sca = _best_of(lambda: make_scorer(_small_cache(), engine="scalar"))
+    return _component(w_vec, w_sca, n_configs=SMALL_SPACE_N)
+
+
+def bench_campaign() -> dict:
+    walls, evals, scores = {}, {}, {}
+    for engine in ("vectorized", "scalar"):
+        # fresh caches per engine: spaces memoize ids/validity/neighbors as
+        # they are exercised, so sharing objects would hand the
+        # second-measured engine a warm cache and skew the ratio
+        scorers = [make_scorer(c, engine=engine) for c in _hub_caches()]
+        scorers.append(make_scorer(_small_cache(), engine=engine))
+        # best of two passes: the second runs against warm space caches —
+        # what a long campaign actually sees — and is far less noisy,
+        # which matters because CI gates on this ratio
+        best_wall = float("inf")
+        for _pass in range(2):
+            t0 = time.perf_counter()
+            fresh = 0
+            engine_scores = {}
+            for strat, hp in CAMPAIGN_SET:
+                rep = evaluate_strategy(lambda: get_strategy(strat, **hp),
+                                        scorers, repeats=REPEATS, seed=0)
+                fresh += rep.fresh_evals
+                hp_id = ",".join(f"{k}={hp[k]}" for k in sorted(hp))
+                engine_scores[f"{strat}({hp_id})"] = rep.score
+            best_wall = min(best_wall, time.perf_counter() - t0)
+        walls[engine] = best_wall
+        evals[engine] = fresh
+        scores[engine] = engine_scores
+    if scores["vectorized"] != scores["scalar"]:
+        raise AssertionError(
+            "engine parity violation: vectorized and scalar campaigns "
+            f"disagree: {scores}")
+    checksum = hashlib.sha256(json.dumps(
+        {k: repr(v) for k, v in sorted(scores["vectorized"].items())},
+        sort_keys=True).encode()).hexdigest()
+    return _component(
+        walls["vectorized"], walls["scalar"],
+        evals_per_sec=evals["vectorized"] / walls["vectorized"],
+        evals_per_sec_scalar=evals["scalar"] / walls["scalar"],
+        fresh_evals=evals["vectorized"], repeats=REPEATS,
+        scores=scores["vectorized"], score_checksum=checksum)
+
+
+def run_bench() -> dict:
+    big = _hub_caches()[0]  # gemm@tpu_v5e: the largest hub space
+    fresh_c, revisit_c = bench_replay(big)
+    report = {
+        "format": BENCH_FORMAT,
+        "version": BENCH_VERSION,
+        "profile": {
+            "fast": FAST,
+            "repeats": REPEATS,
+            "hub": HUB_SELECTION,
+            "small_space": SMALL_SPACE_N,
+            "campaign_set": [f"{s}:{sorted(hp.items())}"
+                             for s, hp in CAMPAIGN_SET],
+        },
+        "components": {
+            "replay_fresh": fresh_c,
+            "replay_revisit": revisit_c,
+            "score_trace": bench_score_trace(big),
+            "baseline_small": bench_baseline_small(),
+            "campaign": bench_campaign(),
+        },
+    }
+    comp = report["components"]
+    report["score_checksum"] = comp["campaign"]["score_checksum"]
+    report["evals_per_sec"] = comp["replay_fresh"]["evals_per_sec"]
+    # headline: geometric mean of the per-component engine speedups
+    speedups = [c["speedup"] for c in comp.values()]
+    report["speedup_geomean"] = float(np.exp(np.mean(np.log(speedups))))
+    return report
+
+
+def main(json_out: str | None = None) -> dict:
+    report = run_bench()
+    comp = report["components"]
+    print(f"{'component':16s} "
+          f"{'vectorized':>12s} {'scalar':>12s} {'speedup':>8s}")
+    for name, c in comp.items():
+        print(f"{name:16s} {c['wall_s']*1e3:10.1f}ms {c['wall_s_scalar']*1e3:10.1f}ms "
+              f"{c['speedup']:7.2f}x")
+    print(f"replay throughput: {comp['replay_fresh']['evals_per_sec']:,.0f} "
+          f"fresh evals/s, {comp['replay_revisit']['evals_per_sec']:,.0f} "
+          f"revisits/s")
+    print(f"campaign: {comp['campaign']['evals_per_sec']:,.0f} fresh evals/s "
+          f"({comp['campaign']['fresh_evals']} evals)")
+    print(f"geomean engine speedup: {report['speedup_geomean']:.2f}x")
+    print(f"score checksum: {report['score_checksum'][:16]}…")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {json_out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,12 @@
   record    measured record→replay speedup on a live Pallas space
             (bit-identical trajectory, wall-clock both sides)
   roofline  per-cell roofline table from the dry-run artifacts
+  bench     simulation-engine throughput profile (vectorized vs scalar,
+            score checksums); ``--json OUT`` writes the machine-readable
+            report the CI regression gate consumes (BENCH_simulate.json)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--workers N] [names...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--workers N] [--json OUT]
+                                               [names...]
 Set REPRO_FAST=1 for a reduced-repeats smoke pass.
 
 Campaigns are journaled under ``experiments/hypertune/`` and resume if
@@ -34,14 +38,18 @@ def main() -> None:
                     "(default: all)")
     ap.add_argument("--workers", type=int, default=None,
                     help="campaign worker pool size (same as REPRO_WORKERS)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the machine-readable report of benchmarks "
+                         "that produce one (currently: bench) to OUT — the "
+                         "same entry point the CI regression gate uses")
     args = ap.parse_args()
     if args.workers is not None:
         os.environ["REPRO_WORKERS"] = str(args.workers)
 
     # import after REPRO_WORKERS is set: common reads it at import time
-    from . import (fig2_violins, fig3_generalization, fig5_curves, fig6_meta,
-                   fig8_extended, fig9_speedup, record_replay, roofline_table,
-                   table2_hub)
+    from . import (bench_simulate, fig2_violins, fig3_generalization,
+                   fig5_curves, fig6_meta, fig8_extended, fig9_speedup,
+                   record_replay, roofline_table, table2_hub)
     all_benches = {
         "table2": table2_hub.main,
         "fig2": fig2_violins.main,
@@ -52,15 +60,22 @@ def main() -> None:
         "fig9": fig9_speedup.main,
         "record": record_replay.main,
         "roofline": roofline_table.main,
+        "bench": bench_simulate.main,
     }
+    json_capable = {"bench"}
     names = args.names or list(all_benches)
     unknown = [n for n in names if n not in all_benches]
     if unknown:
         ap.error(f"unknown benchmarks {unknown}; known: {list(all_benches)}")
+    if args.json and not (set(names) & json_capable):
+        ap.error(f"--json requires one of {sorted(json_capable)} in names")
     for name in names:
         t0 = time.perf_counter()
         print(f"\n================ {name} ================", flush=True)
-        all_benches[name]()
+        if name in json_capable:
+            all_benches[name](json_out=args.json)
+        else:
+            all_benches[name]()
         print(f"[{name} done in {time.perf_counter() - t0:.1f}s]", flush=True)
 
 

@@ -57,6 +57,13 @@ def _add_space_args(p: argparse.ArgumentParser) -> None:
                    help="comma-separated hub devices (overrides --split)")
     g.add_argument("--hub-root", default=None,
                    help="hub directory (default: the bundled hub path)")
+    g.add_argument("--engine", choices=("vectorized", "scalar"),
+                   default="vectorized",
+                   help="simulation engine: 'vectorized' resolves lookups "
+                        "and scoring through columnar numpy arrays; "
+                        "'scalar' is the per-evaluation reference path. "
+                        "Scores are bit-identical either way (see "
+                        "docs/performance.md)")
 
 
 def _add_exec_args(p: argparse.ArgumentParser) -> None:
@@ -89,8 +96,10 @@ def _parse_hyperparams(text: str | None) -> dict:
 def build_scorers(args) -> list[SpaceScorer]:
     """Resolve the scoring data (paper Sec. III-B: one scorer per brute-
     forced search space) from ``--cache`` files or the benchmark hub."""
+    engine = getattr(args, "engine", "vectorized")
     if args.cache:
-        return [make_scorer(CacheFile.load(p)) for p in args.cache]
+        return [make_scorer(CacheFile.load(p), engine=engine)
+                for p in args.cache]
     from .core.dataset import DEFAULT_ROOT, load_hub
     from .core.devices import TEST_DEVICES, TRAIN_DEVICES
     root = args.hub_root or DEFAULT_ROOT
@@ -103,7 +112,7 @@ def build_scorers(args) -> list[SpaceScorer]:
     hub = load_hub(root, kernels=kernels, devices=devices)
     if not hub:
         raise SystemExit("no hub spaces matched the selection")
-    return [make_scorer(c) for _, c in sorted(hub.items())]
+    return [make_scorer(c, engine=engine) for _, c in sorted(hub.items())]
 
 
 def _progress(quiet: bool):

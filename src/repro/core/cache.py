@@ -19,6 +19,8 @@ import json
 import os
 from typing import Mapping, Sequence
 
+import numpy as np
+
 try:  # optional: zstd gives the best ratio, but the stdlib must suffice
     import zstandard
 except ImportError:  # pragma: no cover - depends on environment
@@ -126,6 +128,98 @@ def membership_space(kernel: str, device: str,
     return SearchSpace(tun, (member,), name=f"{kernel}@{device}")
 
 
+class CacheColumns:
+    """Columnar (array-backed) view of a cache's results.
+
+    The simulation hot path — millions of replayed evaluations per
+    hypertuning campaign — is dominated by per-evaluation dict lookups,
+    attribute access, and the ``CachedResult.charge_s`` sum recomputed on
+    every visit. This view lays the same data out once as contiguous numpy
+    arrays plus a config-id hash table, so whole batches of configs resolve
+    in one fancy-indexed gather (see ``runner.SimulationRunner.run_batch``
+    and ``methodology.make_scorer``).
+
+    Invariants:
+      * row order == ``results`` insertion order (the same order the scalar
+        path iterates, so fixed-order reductions stay bit-identical);
+      * ``charge_s``/``run_s`` are computed with the *scalar* left-to-right
+        reductions of ``CachedResult`` — never a numpy pairwise sum — so a
+        gathered charge equals the scalar path's to the last bit;
+      * the view is immutable; ``CacheFile`` invalidates and rebuilds it on
+        mutation (``insert``) so a stale view can never serve lookups.
+    """
+
+    __slots__ = ("keys", "index", "records", "time_s", "charge_s",
+                 "time_list", "charge_list", "_mean_charge", "_detail")
+
+    def __init__(self, results: Mapping[str, CachedResult]):
+        self.keys = tuple(results.keys())
+        self.index = {k: i for i, k in enumerate(self.keys)}
+        self.records = tuple(results.values())
+        # Python-float mirrors of the hot columns: small batches (a
+        # population generation) resolve faster through plain list indexing
+        # than through numpy's per-call overhead; the arrays win for big
+        # gathers. Both views hold bit-identical values.
+        self.time_list = [r.time_s for r in self.records]
+        self.charge_list = [r.charge_s for r in self.records]  # fixed-order
+        self.time_s = np.array(self.time_list, dtype=np.float64)
+        self.charge_s = np.array(self.charge_list, dtype=np.float64)
+        self._mean_charge: float | None = None
+        # compile/run-split detail columns are built on first access — the
+        # replay/scoring hot paths never touch them, and every insert
+        # invalidation triggers a rebuild of this object
+        self._detail: tuple | None = None
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def _detail_columns(self) -> tuple:
+        if self._detail is None:
+            n = len(self.records)
+            compile_s = np.empty(n, dtype=np.float64)
+            run_s = np.empty(n, dtype=np.float64)
+            overhead_s = np.empty(n, dtype=np.float64)
+            ok = np.empty(n, dtype=bool)
+            for i, r in enumerate(self.records):
+                compile_s[i] = r.compile_s
+                run_s[i] = sum(r.times_s)  # scalar fixed-order reduction
+                overhead_s[i] = r.overhead_s
+                ok[i] = r.status == "ok"
+            self._detail = (compile_s, run_s, overhead_s, ok)
+        return self._detail
+
+    @property
+    def compile_s(self) -> np.ndarray:
+        return self._detail_columns()[0]
+
+    @property
+    def run_s(self) -> np.ndarray:
+        return self._detail_columns()[1]
+
+    @property
+    def overhead_s(self) -> np.ndarray:
+        return self._detail_columns()[2]
+
+    @property
+    def ok(self) -> np.ndarray:
+        return self._detail_columns()[3]
+
+    @property
+    def mean_charge(self) -> float:
+        """Bit-identical to the scalar ``CacheFile.mean_eval_charge`` (a
+        Python left-to-right sum over insertion order, not ``np.mean``)."""
+        if self._mean_charge is None:
+            self._mean_charge = sum(self.charge_list) / len(self.charge_list)
+        return self._mean_charge
+
+    def rows_for(self, keys: Sequence[str]) -> np.ndarray:
+        """Row indices for a batch of config-id keys; -1 marks keys outside
+        the recorded set (the replay treats those as failed compiles)."""
+        idx = self.index
+        return np.fromiter((idx.get(k, -1) for k in keys),
+                           dtype=np.int64, count=len(keys))
+
+
 class CacheFile:
     """In-memory view of one brute-forced search space (kernel × device)."""
 
@@ -136,10 +230,26 @@ class CacheFile:
         self.space = space
         self.results = dict(results)
         self.meta = dict(meta or {})
+        self._columns: CacheColumns | None = None
 
     # ------------------------------------------------------------------- api
     def lookup(self, config: Config) -> CachedResult:
         return self.results[self.space.config_id(config)]
+
+    @property
+    def columns(self) -> CacheColumns:
+        """The columnar view, built lazily and rebuilt after mutation.
+
+        The length guard also catches direct ``results`` dict additions, so
+        code that bypasses ``insert`` still never sees stale arrays."""
+        cols = self._columns
+        if cols is None or len(cols) != len(self.results):
+            cols = self._columns = CacheColumns(self.results)
+        return cols
+
+    def invalidate_columns(self) -> None:
+        """Drop the columnar view; the next ``columns`` access rebuilds it."""
+        self._columns = None
 
     def insert(self, key: str, result: CachedResult,
                overwrite: bool = False) -> None:
@@ -149,6 +259,9 @@ class CacheFile:
         fold in one observation at a time); re-inserting an existing key with
         a different result raises unless ``overwrite`` — silently keeping one
         of two conflicting measurements would corrupt the replay.
+
+        Any columnar view is invalidated: a cache mutated after its arrays
+        were built must never serve stale lookups.
         """
         prior = self.results.get(key)
         if prior is not None and prior != result and not overwrite:
@@ -156,6 +269,16 @@ class CacheFile:
                 f"cache {self.kernel}@{self.device} already holds a "
                 f"different result for config {key!r}")
         self.results[key] = result
+        self._columns = None
+
+    def __getstate__(self) -> dict:
+        """Pickle without the columnar arrays: parallel campaigns ship caches
+        to worker processes once per pool (``parallel.CampaignExecutor``),
+        and the view rebuilds lazily on first use — shipping it would roughly
+        double the payload for no benefit."""
+        state = self.__dict__.copy()
+        state["_columns"] = None
+        return state
 
     @property
     def ok_values(self) -> list:
@@ -175,13 +298,14 @@ class CacheFile:
 
     def mean_eval_charge(self) -> float:
         """Average simulated cost of one fresh evaluation — used for the
-        calculated random-search baseline's time axis."""
+        calculated random-search baseline's time axis. Served from the
+        columnar view (the scalar path recomputed the whole sum on every
+        out-of-space lookup); the reduction order is unchanged."""
         if not self.results:
             raise ValueError(
                 f"cache {self.kernel}@{self.device} is empty (no recorded "
                 "evaluations); record or brute-force the space first")
-        charges = [r.charge_s for r in self.results.values()]
-        return sum(charges) / len(charges)
+        return self.columns.mean_charge
 
     # -------------------------------------------------------------------- io
     def to_json(self) -> dict:

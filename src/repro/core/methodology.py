@@ -37,11 +37,28 @@ DEFAULT_SAMPLES = 50
 BASELINE_RUNS = 1000
 BASELINE_SEED = 0xB0B
 HARD_TIME_CAP_EVALS = 3000  # tractability cap: budget ≤ cap × mean_charge
+ENGINES = ("vectorized", "scalar")
+# Baseline vectorization: batching virtual runs into (block, |space|)
+# matrices beats the per-run loop only while the block's working set stays
+# cache-resident — for large spaces the per-run arrays already amortize the
+# numpy call overhead and batching just burns memory bandwidth (measured:
+# 1.7× at 256 configs, 0.8× at 10k). Above the cutover the vectorized
+# builder delegates to the per-run path (bit-identical either way).
+_BASELINE_VECTOR_MAX_N = 1536
+_BASELINE_BLOCK_ELEMS = 1 << 14
 
 
 @dataclasses.dataclass
 class SpaceScorer:
-    """Precomputed scoring context for one search space (one cache file)."""
+    """Precomputed scoring context for one search space (one cache file).
+
+    ``engine`` selects between the array-backed fast path (``"vectorized"``,
+    the default: batched baseline construction, ``np.searchsorted`` curve
+    sampling, columnar ``SimulationRunner``) and the original per-evaluation
+    ``"scalar"`` path. Both produce bit-identical scores — the scalar path
+    is kept as the parity reference and the regression benchmark's
+    denominator, not as a fallback.
+    """
 
     cache: CacheFile
     values: np.ndarray        # sorted finite objective values (ascending)
@@ -54,6 +71,7 @@ class SpaceScorer:
     # virtual random-search runs: improvement step functions
     _imp_times: np.ndarray    # (R, K) padded with +inf
     _imp_values: np.ndarray   # (R, K) padded with worst value
+    engine: str = "vectorized"
 
     @property
     def name(self) -> str:
@@ -83,7 +101,47 @@ class SpaceScorer:
         """P_t (Eq. 2) for one run's trace [(cum_seconds, value, config)...].
 
         Before the first finite observation the run scores 0 (== baseline).
+        Vectorized: the best-so-far step function comes from
+        ``np.minimum.accumulate`` over the trace's value column, and all
+        sample points resolve through one ``np.searchsorted`` over the
+        improvement times — bit-identical to the scalar loop (same float64
+        arithmetic per sample).
         """
+        if self.engine != "vectorized":
+            return self._score_trace_scalar(trace, times, baseline)
+        if baseline is None:
+            baseline = self.baseline_at_time(times)
+        out = np.zeros(len(times))
+        # improvement extraction stays a single sequential pass (a handful
+        # of appends; vectorizing it would re-read every trace tuple into
+        # arrays and lose on long traces) — the per-sample loop is what
+        # vectorizes, collapsing 50 searchsorted calls into one
+        best = math.inf
+        ts_list, bs_list = [], []
+        for t_cum, value, _cfg in trace:
+            if value < best:
+                best = value
+                ts_list.append(t_cum)
+                bs_list.append(best)
+        if not ts_list:
+            return out
+        ts = np.asarray(ts_list, dtype=np.float64)
+        bs = np.asarray(bs_list, dtype=np.float64)
+        k = np.searchsorted(ts, times, side="right") - 1
+        bk = bs[np.maximum(k, 0)]
+        sb = np.asarray(baseline, dtype=np.float64)
+        denom = sb - self.optimum
+        with np.errstate(divide="ignore", invalid="ignore"):
+            score = (sb - bk) / denom
+        score = np.where(denom <= 0,
+                         np.where(bk <= self.optimum, 1.0, 0.0), score)
+        valid = (k >= 0) & np.isfinite(bk)
+        return np.where(valid, score, 0.0)
+
+    def _score_trace_scalar(self, trace: Sequence[tuple], times: np.ndarray,
+                            baseline: np.ndarray | None = None) -> np.ndarray:
+        """The original per-sample loop — parity reference for
+        ``score_trace`` (kept verbatim; see tests/test_engine_parity.py)."""
         if baseline is None:
             baseline = self.baseline_at_time(times)
         best = math.inf
@@ -111,7 +169,60 @@ class SpaceScorer:
 def _virtual_random_runs(values: np.ndarray, charges: np.ndarray,
                          n_runs: int, seed: int) -> tuple:
     """Improvement step functions of ``n_runs`` virtual random-search runs
-    (without replacement, per-config charges). Returns padded (times, bests)."""
+    (without replacement, per-config charges). Returns padded (times, bests).
+
+    Vectorized: runs are processed in blocks as one (block, |space|)
+    cumulative-time / running-min computation. Only the permutation *draws*
+    stay a loop — ``rng.permutation`` must be called once per run in the
+    original order so the RNG stream (and therefore every baseline, budget,
+    and downstream score) is bit-identical to the scalar path.
+    """
+    if len(values) > _BASELINE_VECTOR_MAX_N:
+        return _virtual_random_runs_scalar(values, charges, n_runs, seed)
+    rng = np.random.default_rng(seed)
+    n = len(values)
+    block = max(16, _BASELINE_BLOCK_ELEMS // max(n, 1))
+    finite = np.isfinite(values)
+    worst = values[finite].max()
+    blocks: list[tuple[np.ndarray, np.ndarray]] = []
+    for start in range(0, n_runs, block):
+        r = min(block, n_runs - start)
+        perms = np.empty((r, n), dtype=np.intp)
+        for i in range(r):
+            perms[i] = rng.permutation(n)  # same draw order as scalar
+        v = values[perms]                                      # (r, n)
+        t = np.cumsum(charges[perms], axis=1)                  # sequential
+        run_min = np.fmin.accumulate(
+            np.where(np.isfinite(v), v, np.inf), axis=1)
+        # improvement points: first occurrence of each new minimum
+        is_imp = np.empty((r, n), dtype=bool)
+        is_imp[:, 0] = True
+        is_imp[:, 1:] = run_min[:, 1:] < run_min[:, :-1]
+        is_imp &= np.isfinite(run_min)
+        k = int(is_imp.sum(axis=1).max())
+        times = np.full((r, k), np.inf)
+        bests = np.full((r, k), worst)
+        rows, src = np.nonzero(is_imp)
+        dest = (np.cumsum(is_imp, axis=1) - 1)[rows, src]
+        times[rows, dest] = t[rows, src]
+        bests[rows, dest] = run_min[rows, src]
+        blocks.append((times, bests))
+    k = max(b.shape[1] for b, _ in blocks)
+    all_t = np.full((n_runs, k), np.inf)
+    all_b = np.full((n_runs, k), worst)
+    row = 0
+    for times, bests in blocks:
+        r, kc = times.shape
+        all_t[row:row + r, :kc] = times
+        all_b[row:row + r, :kc] = bests
+        row += r
+    return all_t, all_b
+
+
+def _virtual_random_runs_scalar(values: np.ndarray, charges: np.ndarray,
+                                n_runs: int, seed: int) -> tuple:
+    """The original one-run-at-a-time builder — parity reference for
+    ``_virtual_random_runs`` (kept verbatim)."""
     rng = np.random.default_rng(seed)
     n = len(values)
     imp_t: list[np.ndarray] = []
@@ -140,11 +251,22 @@ def _virtual_random_runs(values: np.ndarray, charges: np.ndarray,
 
 def make_scorer(cache: CacheFile, cutoff: float = DEFAULT_CUTOFF,
                 n_baseline_runs: int = BASELINE_RUNS,
-                hard_cap: int = HARD_TIME_CAP_EVALS) -> SpaceScorer:
-    all_values = np.array([r.time_s for r in cache.results.values()],
-                          dtype=np.float64)
-    all_charges = np.array([r.charge_s for r in cache.results.values()],
-                           dtype=np.float64)
+                hard_cap: int = HARD_TIME_CAP_EVALS,
+                engine: str = "vectorized") -> SpaceScorer:
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; known: {ENGINES}")
+    if engine == "vectorized":
+        # columnar view: same contents, same insertion order as the scalar
+        # comprehension below, built once and shared with the runners
+        cols = cache.columns
+        all_values, all_charges = cols.time_s, cols.charge_s
+        runs_builder = _virtual_random_runs
+    else:
+        all_values = np.array([r.time_s for r in cache.results.values()],
+                              dtype=np.float64)
+        all_charges = np.array([r.charge_s for r in cache.results.values()],
+                               dtype=np.float64)
+        runs_builder = _virtual_random_runs_scalar
     values = np.sort(all_values[np.isfinite(all_values)])
     if values.size == 0:
         raise ValueError(f"cache {cache.kernel}@{cache.device} has no ok results")
@@ -153,11 +275,11 @@ def make_scorer(cache: CacheFile, cutoff: float = DEFAULT_CUTOFF,
     optimum = float(values[0])
     median = float(np.median(values))
     seed = BASELINE_SEED ^ zlib.crc32(f"{cache.kernel}@{cache.device}".encode())
-    imp_t, imp_v = _virtual_random_runs(all_values, all_charges,
-                                        n_baseline_runs, seed)
+    imp_t, imp_v = runs_builder(all_values, all_charges,
+                                n_baseline_runs, seed)
     scorer = SpaceScorer(cache, values, n_total, mean_charge, optimum, median,
                          budget_s=0.0, n_budget=0, _imp_times=imp_t,
-                         _imp_values=imp_v)
+                         _imp_values=imp_v, engine=engine)
     # budget: first time the baseline crosses median - cutoff*(median - opt),
     # by bisection (the baseline is monotone non-increasing in t)
     target = median - cutoff * (median - optimum)
@@ -214,7 +336,8 @@ def run_repeat(scorer: SpaceScorer, make_strategy: Callable[[], Strategy],
     rng = random.Random((seed * 1_000_003 + repeat)
                         ^ zlib.crc32(scorer.name.encode()))
     runner = SimulationRunner(scorer.cache,
-                              Budget(max_seconds=scorer.budget_s))
+                              Budget(max_seconds=scorer.budget_s),
+                              columnar=scorer.engine == "vectorized")
     strategy = make_strategy()
     strategy.run(scorer.cache.space, runner, rng)
     return RepeatResult(scorer.score_trace(runner.trace, times, baseline),
@@ -252,7 +375,14 @@ def evaluate_strategy(make_strategy: Callable[[], Strategy],
     cells: list[RepeatResult | None] = [None] * len(cells_idx)
     if executor is not None and executor.parallel:
         ctx = (tuple(scorers), make_strategy, seed, times, baselines)
-        for i, res in executor.map(_repeat_cell, cells_idx, shared=ctx):
+        # chunk the (space × repeat) grid: vectorized cells are cheap, so
+        # amortize pool IPC while keeping ≥ ~4 chunks per worker in flight.
+        # Cells are never journaled individually (checkpointing happens one
+        # level up, per hyperparameter configuration), so chunking does not
+        # coarsen campaign resume granularity.
+        chunksize = max(1, len(cells_idx) // (executor.workers * 4))
+        for i, res in executor.map(_repeat_cell, cells_idx, shared=ctx,
+                                   chunksize=chunksize):
             cells[i] = res
     else:
         for i, (si, r) in enumerate(cells_idx):

@@ -94,6 +94,24 @@ def _call_with_shared(fn: Callable, args: tuple) -> Any:
     return fn(_SHARED, *args)
 
 
+# Chunked task wrappers: one pool submission evaluates a whole slice of the
+# task grid. The vectorized scoring engine made individual (space, repeat)
+# cells cheap enough that per-task IPC (submit + pickle + result wakeup)
+# dominates small tasks on a process pool; chunking amortizes it without
+# changing results (cells are still reduced in index order by the caller).
+def _run_chunk(fn: Callable, argtuples: Sequence[tuple]) -> list:
+    return [fn(*args) for args in argtuples]
+
+
+def _run_chunk_shared(fn: Callable, shared: Any,
+                      argtuples: Sequence[tuple]) -> list:
+    return [fn(shared, *args) for args in argtuples]
+
+
+def _run_chunk_global(fn: Callable, argtuples: Sequence[tuple]) -> list:
+    return [fn(_SHARED, *args) for args in argtuples]
+
+
 # ---------------------------------------------------------------- executor
 class CampaignExecutor:
     """Deterministic worker pool for campaign tasks (paper Sec. III-C/E).
@@ -162,14 +180,19 @@ class CampaignExecutor:
         return self._proc_pool
 
     def map(self, fn: Callable, argtuples: Sequence[tuple],
-            shared: Any = None) -> Iterator[tuple[int, Any]]:
+            shared: Any = None,
+            chunksize: int = 1) -> Iterator[tuple[int, Any]]:
         """Run ``fn(*argtuples[i])`` — or ``fn(shared, *argtuples[i])`` when
         ``shared`` is given — for every i; yield ``(i, result)`` as tasks
         complete (serial: in submission order). ``shared`` is
         campaign-constant context shipped once per worker process instead of
         once per task; repeated ``map`` calls with an identical payload
-        reuse the warm pool. Exceptions propagate; on early generator
-        close, unstarted tasks are cancelled — together with
+        reuse the warm pool. ``chunksize > 1`` groups consecutive tasks
+        into one pool submission (amortizing IPC for cheap tasks); results
+        are still yielded per task with their original indices, so callers'
+        index-order reductions — and therefore campaign scores — are
+        unchanged at any chunk size. Exceptions propagate; on early
+        generator close, unstarted tasks are cancelled — together with
         ``CampaignJournal`` this is what makes campaigns interruptible.
         """
         backend = self._resolve_backend(fn, argtuples, shared)
@@ -177,25 +200,32 @@ class CampaignExecutor:
             for i, args in enumerate(argtuples):
                 yield i, (fn(*args) if shared is None else fn(shared, *args))
             return
+        chunksize = max(1, int(chunksize))
+        chunks = [(start, argtuples[start:start + chunksize])
+                  for start in range(0, len(argtuples), chunksize)]
         if backend == "thread":
             if self._thread_pool is None:
                 self._thread_pool = ThreadPoolExecutor(
                     max_workers=self.workers)
             pool = self._thread_pool
-            submit = (lambda args: pool.submit(fn, *args) if shared is None
-                      else pool.submit(fn, shared, *args))
+            submit = (lambda chunk: pool.submit(_run_chunk, fn, chunk)
+                      if shared is None
+                      else pool.submit(_run_chunk_shared, fn, shared, chunk))
         else:
             pool = self._get_process_pool(shared)
-            submit = (lambda args: pool.submit(fn, *args) if shared is None
-                      else pool.submit(_call_with_shared, fn, args))
+            submit = (lambda chunk: pool.submit(_run_chunk, fn, chunk)
+                      if shared is None
+                      else pool.submit(_run_chunk_global, fn, chunk))
         futures = {}
         try:
-            futures = {submit(args): i for i, args in enumerate(argtuples)}
+            futures = {submit(chunk): start for start, chunk in chunks}
             pending = set(futures)
             while pending:
                 done, pending = wait(pending, return_when=FIRST_COMPLETED)
                 for fut in done:
-                    yield futures[fut], fut.result()
+                    start = futures[fut]
+                    for off, res in enumerate(fut.result()):
+                        yield start + off, res
         finally:
             for fut in futures:  # no-op for completed futures
                 fut.cancel()

@@ -130,6 +130,16 @@ class RecordingRunner:
             self.recorded += 1
         return obs
 
+    def run_batch(self, configs) -> list:
+        """Batch evaluation with recording. Must be defined here (not left to
+        ``__getattr__`` delegation): forwarding ``run_batch`` straight to the
+        wrapped runner would evaluate configs without appending them to the
+        shard — a recording that silently loses every batched strategy's
+        observations. Live runs measure one config at a time anyway, so the
+        loop *is* the batch; each observation is durably recorded the moment
+        it is measured."""
+        return [self.run(c) for c in configs]
+
     def __call__(self, config) -> float:
         return self.run(config).value
 

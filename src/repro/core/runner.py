@@ -26,6 +26,14 @@ Every fresh evaluation is appended to ``trace`` as
 ``(cumulative_simulated_seconds, objective_value, config)`` — the methodology
 computes best-so-far performance curves from this.
 
+Batch evaluation (the ``BatchRunner`` protocol): every runner answers
+``run_batch(configs)`` — bit-identical to calling ``run`` in a loop, same
+memoization, budget accounting, trace order, and ``BudgetExhausted`` point.
+The base implementation *is* that loop (the scalar reference path);
+``SimulationRunner`` overrides it to resolve the whole batch through the
+cache's columnar view (``cache.CacheColumns``) in one vectorized gather, so
+population strategies can evaluate an entire generation per call.
+
 Runners are single-run state (memo, budget, trace) and are NOT shared across
 threads: parallel campaigns (``core.parallel``) construct one runner per
 (space, repeat) task — see ``methodology.run_repeat``.
@@ -34,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, Protocol, Sequence, runtime_checkable
 
 from .budget import Budget, BudgetExhausted
 from .cache import CacheFile, CachedResult
@@ -57,6 +65,24 @@ class Observation:
     result: CachedResult | None = None
 
 
+@runtime_checkable
+class BatchRunner(Protocol):
+    """Anything a strategy can hand a whole generation of configs to.
+
+    Contract: ``run_batch(configs)`` is observably identical to
+    ``[run(c) for c in configs]`` — same evaluation order, same memo
+    hits, same budget charges and trace entries, and ``BudgetExhausted``
+    raised at exactly the same element (results for earlier elements stay
+    committed to memo/trace). Implementations are free to *resolve* the
+    batch however they like (``SimulationRunner`` gathers it from columnar
+    arrays in one shot) as long as the observable sequence matches.
+    """
+
+    def run(self, config: Config) -> Observation: ...
+
+    def run_batch(self, configs: Sequence[Config]) -> list[Observation]: ...
+
+
 class Runner:
     """Base: memoization, budget accounting, trace recording."""
 
@@ -76,26 +102,46 @@ class Runner:
         compile/run split (e.g. the meta level's campaign scores)."""
         raise NotImplementedError
 
-    def run(self, config: Config) -> Observation:
-        key = self.space.config_id(config)
-        hit = self.memo.get(key)
-        if hit is not None:
-            return hit
-        self.budget.check()  # raises BudgetExhausted when spent
+    def _evaluate_keyed(self, key: str,
+                        config: Config) -> tuple[CachedResult, float, str, float]:
+        """``(result, value, status, charge)`` for one fresh evaluation.
+
+        The key (already computed by ``run``/``run_batch`` for memoization)
+        is passed down so lookup-style runners need not re-derive it.
+        """
         out = self._evaluate(config)
         if isinstance(out, CachedResult):
-            result = out
-            value, status, charge = out.time_s, out.status, out.charge_s
-        else:
-            value, status, charge = out
-            # degenerate detail: the whole charge attributed to compile
-            result = CachedResult(status, value, (), charge)
+            return out, out.time_s, out.status, out.charge_s
+        value, status, charge = out
+        # degenerate detail: the whole charge attributed to compile
+        return CachedResult(status, value, (), charge), value, status, charge
+
+    def _commit(self, key: str, config: Config, result: CachedResult,
+                value: float, status: str, charge: float) -> Observation:
+        """Account one fresh evaluation (budget, memo, trace) — the single
+        bookkeeping path shared by ``run`` and ``run_batch``."""
         self.budget.charge(charge)
         self.fresh_evals += 1
         obs = Observation(config, value, status, charge, result)
         self.memo[key] = obs
         self.trace.append((self.budget.spent_seconds, value, config))
         return obs
+
+    def run(self, config: Config) -> Observation:
+        key = self.space.config_id(config)
+        hit = self.memo.get(key)
+        if hit is not None:
+            return hit
+        self.budget.check()  # raises BudgetExhausted when spent
+        return self._commit(key, config, *self._evaluate_keyed(key, config))
+
+    def run_batch(self, configs: Sequence[Config]) -> list[Observation]:
+        """Evaluate ``configs`` in order (the scalar reference loop).
+
+        See ``BatchRunner``: subclasses that override this must preserve
+        loop-of-``run`` observable behaviour exactly.
+        """
+        return [self.run(c) for c in configs]
 
     def __call__(self, config: Config) -> float:
         return self.run(config).value
@@ -111,9 +157,23 @@ class Runner:
 
 
 class SimulationRunner(Runner):
-    def __init__(self, cache: CacheFile, budget: Budget):
+    """Replays a T4 cache; the engine behind every simulated campaign.
+
+    ``columnar=True`` (the default) resolves evaluations through the
+    cache's array-backed view: single evaluations skip the results-dict hop
+    and the per-visit ``charge_s`` re-summation, and ``run_batch`` gathers
+    a whole generation's values/charges in one fancy-indexed numpy read.
+    ``columnar=False`` keeps the original scalar dict path — the reference
+    the parity suite and the regression benchmark compare against. Both
+    paths are bit-identical by construction (the columns are built with the
+    scalar path's own fixed-order reductions).
+    """
+
+    def __init__(self, cache: CacheFile, budget: Budget,
+                 columnar: bool = True):
         super().__init__(cache.space, budget)
         self.cache = cache
+        self.columnar = columnar
 
     def _evaluate(self, config: Config) -> CachedResult:
         try:
@@ -123,6 +183,107 @@ class SimulationRunner(Runner):
             # failed compile costing an average evaluation
             return CachedResult("error", INVALID, (),
                                 self.cache.mean_eval_charge())
+
+    def _evaluate_keyed(self, key: str,
+                        config: Config) -> tuple[CachedResult, float, str, float]:
+        if not self.columnar:
+            return super()._evaluate_keyed(key, config)
+        cols = self.cache.columns
+        row = cols.index.get(key, -1)
+        if row < 0:
+            # mean_eval_charge (not cols.mean_charge) so an empty cache
+            # raises its clear "record the space first" error, not a
+            # ZeroDivisionError
+            charge = self.cache.mean_eval_charge()
+            return CachedResult("error", INVALID, (), charge), \
+                INVALID, "error", charge
+        result = cols.records[row]
+        # result.time_s/status are the authoritative Python scalars; the
+        # charge comes from the precomputed column (same value, no re-sum)
+        return result, result.time_s, result.status, cols.charge_list[row]
+
+    # gather granularity: a strategy may hand over far more configs than the
+    # budget allows (random search batches the whole space permutation);
+    # chunks grow geometrically so a budget-capped run wastes at most one
+    # small chunk of key work past the exhaustion point, while full-space
+    # replays still amortize into large chunks
+    BATCH_CHUNK_MIN = 64
+    BATCH_CHUNK_MAX = 2048
+
+    def run_batch(self, configs: Sequence[Config]) -> list[Observation]:
+        if not self.columnar:
+            return super().run_batch(configs)
+        cols = self.cache.columns
+        space = self.space
+        memo = self.memo
+        budget = self.budget
+        trace = self.trace
+        records = cols.records
+        time_list, charge_list = cols.time_list, cols.charge_list
+        index_get = cols.index.get
+        memo_get = memo.get
+        append = trace.append
+        new_obs = Observation.__new__
+        out: list[Observation] = []
+        # budget accounting is mirrored in locals (same left-to-right float
+        # accumulation as Budget.charge, minus per-eval attribute churn) and
+        # synced back even when BudgetExhausted aborts the batch mid-way
+        max_s, max_e = budget.max_seconds, budget.max_evals
+        spent_s, spent_e = budget.spent_seconds, budget.spent_evals
+        fresh = self.fresh_evals
+        mean_charge: float | None = None
+        try:
+            start, step = 0, self.BATCH_CHUNK_MIN
+            while start < len(configs):
+                chunk = configs[start:start + step]
+                start += step
+                step = min(step * 2, self.BATCH_CHUNK_MAX)
+                for key, config in zip(space.config_ids(chunk), chunk):
+                    obs = memo_get(key)
+                    if obs is None:
+                        if (max_s is not None and spent_s >= max_s) or \
+                           (max_e is not None and spent_e >= max_e):
+                            # sync, then raise through Budget.check so the
+                            # exception (and its message) match the scalar
+                            # path exactly
+                            budget.spent_seconds = spent_s
+                            budget.spent_evals = spent_e
+                            budget.check()
+                        row = index_get(key, -1)
+                        if row >= 0:
+                            result = records[row]
+                            status = result.status
+                            value = time_list[row]
+                            charge = charge_list[row]
+                        else:
+                            # outside the recorded set: a failed compile at
+                            # the mean charge, like the scalar path (and
+                            # the same clear error on an empty cache)
+                            if mean_charge is None:
+                                mean_charge = self.cache.mean_eval_charge()
+                            charge = mean_charge
+                            result = CachedResult("error", INVALID, (), charge)
+                            status, value = "error", INVALID
+                        spent_s += charge
+                        spent_e += 1
+                        fresh += 1
+                        # frozen-dataclass fast construction: __init__ pays
+                        # object.__setattr__ per field, which dominates the
+                        # commit at replay rates; filling __dict__ directly
+                        # builds an identical instance (__eq__/fields/hash
+                        # semantics unchanged)
+                        obs = new_obs(Observation)
+                        obs.__dict__.update(config=config, value=value,
+                                            status=status, charge_s=charge,
+                                            result=result)
+                        memo[key] = obs
+                        append((spent_s, value, config))
+                    out.append(obs)
+        finally:
+            budget.spent_seconds = spent_s
+            budget.spent_evals = spent_e
+            self.fresh_evals = fresh
+        return out
 
 
 class CostModelRunner(Runner):

@@ -42,9 +42,12 @@ class SearchSpace:
         self._valid: list[Config] | None = None
         self._valid_set: frozenset | None = None
         # hot-path caches: simulated tuning calls neighbors()/nearest_valid()
-        # millions of times on the same few thousand configs
+        # and config_id() millions of times on the same few thousand configs
         self._nbr_cache: dict[tuple, list[Config]] = {}
         self._repair_cache: dict[Config, Config] = {}
+        self._id_cache: dict[Config, str] = {}
+        self._validity_cache: dict[Config, bool] = {}
+        self._decode_tables: tuple | None = None
 
     # ------------------------------------------------------------------ views
     @property
@@ -66,6 +69,15 @@ class SearchSpace:
 
     # ------------------------------------------------------------ enumeration
     def is_valid(self, config: Config) -> bool:
+        """Validity, memoized per config: population strategies re-check the
+        same configs every generation (repair, neighbor moves), and for hub
+        spaces the membership constraint costs a string join per call."""
+        hit = self._validity_cache.get(config)
+        if hit is None:
+            hit = self._validity_cache[config] = self._compute_valid(config)
+        return hit
+
+    def _compute_valid(self, config: Config) -> bool:
         if len(config) != len(self.tunables):
             return False
         for t, v in zip(self.tunables, config):
@@ -101,8 +113,27 @@ class SearchSpace:
         return len(self._enumerate())
 
     def config_id(self, config: Config) -> str:
-        """Stable string key for caches (T4 data uses stringified configs)."""
-        return ",".join(str(v) for v in config)
+        """Stable string key for caches (T4 data uses stringified configs).
+
+        Memoized per space: campaigns revisit the same few thousand configs
+        millions of times, and the str-join dominates the lookup cost. The
+        cache is bounded by the visited-config count (≤ cartesian size)."""
+        key = self._id_cache.get(config)
+        if key is None:
+            key = self._id_cache[config] = ",".join(str(v) for v in config)
+        return key
+
+    def config_ids(self, configs: Sequence[Config]) -> list[str]:
+        """Batch ``config_id`` — one call for a whole generation (the
+        ``BatchRunner`` hot path)."""
+        cache = self._id_cache
+        out = []
+        for config in configs:
+            key = cache.get(config)
+            if key is None:
+                key = cache[config] = ",".join(str(v) for v in config)
+            out.append(key)
+        return out
 
     def config_from_id(self, key: str) -> Config:
         parts = key.split(",")
@@ -176,6 +207,27 @@ class SearchSpace:
             k = max(0, min(t.cardinality - 1, k))
             out.append(t.values[k])
         return tuple(out)
+
+    def decode_batch(self, x: "np.ndarray", rng: random.Random) -> list:
+        """Vectorized ``from_indices`` + ``nearest_valid`` over a (P, T)
+        index matrix — the ask half of a population strategy's batch step.
+
+        Rounds and clips every position in a handful of whole-matrix numpy
+        ops (``np.rint`` matches Python ``round``: both half-to-even), maps
+        index columns to value columns with one ``take`` per tunable, then
+        repairs in row order — repairs draw from ``rng`` exactly as the
+        per-particle loop did, so the stream stays bit-identical.
+        """
+        x = np.asarray(x, dtype=np.float64)
+        if self._decode_tables is None:
+            self._decode_tables = (
+                [np.array(t.values, dtype=object) for t in self.tunables],
+                np.array([t.cardinality - 1 for t in self.tunables],
+                         dtype=np.float64))
+        tables, hi = self._decode_tables
+        k = np.clip(np.rint(x), 0.0, hi).astype(np.intp)
+        columns = [tables[i][k[:, i]].tolist() for i in range(len(tables))]
+        return [self.nearest_valid(c, rng) for c in zip(*columns)]
 
     def nearest_valid(self, config: Config, rng: random.Random) -> Config:
         """Repair an invalid config: breadth-first over single-tunable moves,

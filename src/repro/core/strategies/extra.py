@@ -18,8 +18,22 @@ from .base import Strategy
 
 
 class DifferentialEvolution(Strategy):
+    """DE/rand/1/bin over the continuous index space.
+
+    ``updating`` controls selection semantics (mirrors scipy's
+    ``differential_evolution``): ``"immediate"`` (default) updates the
+    population member-by-member within a generation — the original,
+    order-dependent behaviour, kept as the default so existing campaigns
+    replay bit-identically; ``"deferred"`` builds every trial vector from
+    the generation's snapshot and evaluates the whole generation as one
+    ask/tell batch (one vectorized lookup on a simulation runner). It is a
+    DEFAULTS-only knob, not part of ``HYPERPARAM_SPACE`` — adding it to the
+    grid would change every exhaustive campaign's enumeration.
+    """
+
     name = "differential_evolution"
-    DEFAULTS = {"popsize": 20, "maxiter": 100, "F": 0.8, "CR": 0.9}
+    DEFAULTS = {"popsize": 20, "maxiter": 100, "F": 0.8, "CR": 0.9,
+                "updating": "immediate"}
     HYPERPARAM_SPACE = {
         "popsize": (10, 20, 30),
         "maxiter": (50, 100, 150),
@@ -37,6 +51,7 @@ class DifferentialEvolution(Strategy):
         popsize = max(4, int(self.hp("popsize")))
         maxiter = int(self.hp("maxiter"))
         F, CR = float(self.hp("F")), float(self.hp("CR"))
+        deferred = str(self.hp("updating")) == "deferred"
         np_rng = np.random.default_rng(rng.getrandbits(64))
         lo = np.zeros(len(space.tunables))
         hi = np.array([t.cardinality - 1 for t in space.tunables], dtype=float)
@@ -45,21 +60,43 @@ class DifferentialEvolution(Strategy):
             cfg = space.nearest_valid(space.from_indices(x), rng)
             return self.fitness(runner(cfg))
 
+        def eval_batch(xs) -> list:
+            # decode + repair vectorized (same rng draw order as the
+            # per-member loop: evaluation draws nothing), one ask/tell batch
+            cfgs = space.decode_batch(np.asarray(xs), rng)
+            return [self.fitness(o.value) for o in runner.run_batch(cfgs)]
+
+        def make_trial(i: int, snapshot: np.ndarray) -> np.ndarray:
+            a, b, c = np_rng.choice(
+                [j for j in range(popsize) if j != i], 3, replace=False)
+            mutant = np.clip(snapshot[a] + F * (snapshot[b] - snapshot[c]),
+                             lo, hi)
+            cross = np_rng.uniform(size=len(lo)) < CR
+            cross[np_rng.integers(len(lo))] = True
+            return np.where(cross, mutant, snapshot[i])
+
         while True:
             pop = np.stack([space.to_indices(space.random_config(rng))
                             for _ in range(popsize)])
-            fit = np.array([eval_idx(x) for x in pop])
+            fit = np.array(eval_batch(pop))
             for _ in range(maxiter):
-                for i in range(popsize):
-                    a, b, c = np_rng.choice(
-                        [j for j in range(popsize) if j != i], 3, replace=False)
-                    mutant = np.clip(pop[a] + F * (pop[b] - pop[c]), lo, hi)
-                    cross = np_rng.uniform(size=len(lo)) < CR
-                    cross[np_rng.integers(len(lo))] = True
-                    trial = np.where(cross, mutant, pop[i])
-                    f = eval_idx(trial)
-                    if f <= fit[i]:
-                        pop[i], fit[i] = trial, f
+                if deferred:
+                    # whole-generation ask/tell: trials come from this
+                    # generation's snapshot, selection applies afterwards
+                    trials = [make_trial(i, pop) for i in range(popsize)]
+                    fs = eval_batch(trials)
+                    for i, (trial, f) in enumerate(zip(trials, fs)):
+                        if f <= fit[i]:
+                            pop[i], fit[i] = trial, f
+                else:
+                    # immediate updating: later mutants see this
+                    # generation's accepted trials (order-dependent — the
+                    # original semantics, bit-identical to the seed repo)
+                    for i in range(popsize):
+                        trial = make_trial(i, pop)
+                        f = eval_idx(trial)
+                        if f <= fit[i]:
+                            pop[i], fit[i] = trial, f
 
 
 class BasinHopping(Strategy):

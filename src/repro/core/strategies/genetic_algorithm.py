@@ -89,8 +89,13 @@ class GeneticAlgorithm(Strategy):
         pop = [space.random_config(rng) for _ in range(popsize)]
         while True:  # restart loop over full GA runs until budget exhausted
             for _gen in range(generations):
-                scored = sorted(((self.fitness(runner(c)), i, c)
-                                 for i, c in enumerate(pop)),
+                # ask/tell: the whole generation is evaluated in one batch
+                # (one vectorized lookup on a simulation runner); population
+                # order is preserved, so the trace — and every downstream
+                # score — matches the former one-config-at-a-time loop
+                obs = runner.run_batch(pop)
+                scored = sorted(((self.fitness(o.value), i, c)
+                                 for i, (o, c) in enumerate(zip(obs, pop))),
                                 key=lambda t: (t[0], t[1]))
                 ranked = [c for _, _, c in scored]
                 # rank weights: best gets weight popsize, worst gets 1

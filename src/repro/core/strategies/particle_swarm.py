@@ -50,10 +50,6 @@ class ParticleSwarm(Strategy):
         hi = np.array([t.cardinality - 1 for t in space.tunables], dtype=float)
         span = np.maximum(hi - lo, 1.0)
 
-        def eval_at(x: np.ndarray) -> tuple[float, tuple]:
-            cfg = space.nearest_valid(space.from_indices(x), rng)
-            return self.fitness(runner(cfg)), cfg
-
         while True:  # restart loop until budget exhausted
             pos = np.stack([space.to_indices(space.random_config(rng))
                             for _ in range(popsize)])
@@ -62,8 +58,13 @@ class ParticleSwarm(Strategy):
             pbest_f = np.full(popsize, np.inf)
             gbest, gbest_f = pos[0].copy(), np.inf
             for _ in range(maxiter):
-                for i in range(popsize):
-                    f, cfg = eval_at(pos[i])
+                # ask/tell: decode + repair the whole swarm in one vectorized
+                # call (same rng draw order as the former interleaved loop —
+                # evaluation draws nothing), then evaluate it as one batch
+                cfgs = space.decode_batch(pos, rng)
+                obs = runner.run_batch(cfgs)
+                for i, (o, cfg) in enumerate(zip(obs, cfgs)):
+                    f = self.fitness(o.value)
                     if f < pbest_f[i]:
                         pbest_f[i] = f
                         pbest[i] = space.to_indices(cfg)

@@ -15,8 +15,10 @@ class RandomSearch(Strategy):
     def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
         # Sample *without replacement* over valid configs (Kernel Tuner
         # semantics: the tuner cache makes revisits free, so random search is
-        # effectively a random permutation of the space).
+        # effectively a random permutation of the space). The whole
+        # permutation goes through the runner as ONE batch: a vectorized
+        # runner resolves it in a single columnar gather, and budget
+        # exhaustion stops it at exactly the same config as the scalar loop.
         order = list(space.valid_configs)
         rng.shuffle(order)
-        for config in order:
-            runner.run(config)
+        runner.run_batch(order)

@@ -1,0 +1,320 @@
+"""Vectorized-engine parity: the array-backed simulation engine must be
+bit-identical to the scalar reference path, observation for observation.
+
+The scalar path is kept in-tree exactly for this purpose (``engine="scalar"``
+scorers, ``SimulationRunner(columnar=False)``, the ``*_scalar`` methodology
+functions); these tests pin the two together across random caches, including
+inf-valued failed configs, out-of-space lookups, empty traces, and budget
+exhaustion mid-batch.
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+from _compat import given, settings, st
+
+from repro.core.budget import Budget, BudgetExhausted
+from repro.core.cache import CacheColumns, CachedResult, CacheFile
+from repro.core.methodology import (_virtual_random_runs,
+                                    _virtual_random_runs_scalar,
+                                    evaluate_strategy, make_scorer)
+from repro.core.runner import SimulationRunner
+from repro.core.searchspace import SearchSpace
+from repro.core.strategies import get_strategy
+from repro.core.tunable import tunables_from_dict
+
+BATCH_STRATEGIES = ("random_search", "genetic_algorithm", "pso",
+                    "differential_evolution")
+
+
+def _random_cache(seed: int, n_a: int = 24, n_b: int = 4,
+                  fail_frac: float = 0.15, name: str = "rand") -> CacheFile:
+    """A random space with inf-valued failures and heterogeneous charges."""
+    rng = np.random.default_rng(seed)
+    space = SearchSpace(tunables_from_dict({"a": tuple(range(n_a)),
+                                            "b": tuple(range(n_b))}),
+                        name=f"{name}{seed}")
+    results = {}
+    for cfg in space.valid_configs:
+        key = space.config_id(cfg)
+        if rng.random() < fail_frac:
+            results[key] = CachedResult("error", math.inf, (),
+                                        float(rng.uniform(0.1, 2.0)), 0.01)
+        else:
+            v = float(rng.lognormal(-6, 0.8))
+            reps = tuple(float(v * rng.uniform(0.9, 1.1))
+                         for _ in range(3))
+            results[key] = CachedResult("ok", v, reps,
+                                        float(rng.uniform(0.1, 1.0)), 0.01)
+    return CacheFile(f"{name}{seed}", "dev", space, results)
+
+
+def _observable(runner: SimulationRunner):
+    return (runner.trace, runner.fresh_evals, runner.budget.spent_seconds,
+            runner.budget.spent_evals, sorted(runner.memo))
+
+
+# ------------------------------------------------------------ batch runner
+def test_run_batch_matches_scalar_loop_exactly():
+    cache = _random_cache(0)
+    configs = cache.space.valid_configs * 2  # revisits included
+    vec = SimulationRunner(cache, Budget(max_seconds=1e9), columnar=True)
+    sca = SimulationRunner(cache, Budget(max_seconds=1e9), columnar=False)
+    obs_v = vec.run_batch(configs)
+    obs_s = [sca.run(c) for c in configs]
+    assert obs_v == obs_s
+    assert _observable(vec) == _observable(sca)
+
+
+def test_run_batch_budget_exhaustion_point_matches():
+    cache = _random_cache(1)
+    configs = cache.space.valid_configs
+    total = sum(r.charge_s for r in cache.results.values())
+    budget_s = total * 0.21  # exhausts somewhere mid-space
+    vec = SimulationRunner(cache, Budget(max_seconds=budget_s), columnar=True)
+    sca = SimulationRunner(cache, Budget(max_seconds=budget_s),
+                           columnar=False)
+    with pytest.raises(BudgetExhausted):
+        vec.run_batch(configs)
+    with pytest.raises(BudgetExhausted):
+        for c in configs:
+            sca.run(c)
+    # identical committed state at the exhaustion point
+    assert _observable(vec) == _observable(sca)
+
+
+def test_run_batch_out_of_space_miss_matches_scalar():
+    cache = _random_cache(2)
+    # drop some recorded configs so lookups miss while staying space-valid
+    victims = list(cache.results)[::5]
+    for key in victims:
+        del cache.results[key]
+    cache.invalidate_columns()
+    configs = cache.space.valid_configs
+    vec = SimulationRunner(cache, Budget(max_seconds=1e9), columnar=True)
+    sca = SimulationRunner(cache, Budget(max_seconds=1e9), columnar=False)
+    obs_v = vec.run_batch(configs)
+    obs_s = [sca.run(c) for c in configs]
+    assert obs_v == obs_s
+    miss = [o for o in obs_v if o.status == "error" and not o.result.times_s
+            and o.charge_s == cache.mean_eval_charge()]
+    assert miss, "expected imputed misses"
+
+
+def test_run_batch_empty():
+    cache = _random_cache(3)
+    runner = SimulationRunner(cache, Budget(max_seconds=1e9))
+    assert runner.run_batch([]) == []
+    assert runner.trace == []
+
+
+# -------------------------------------------------------------- columns
+def test_columns_match_scalar_reductions():
+    cache = _random_cache(4)
+    cols = cache.columns
+    for i, (key, r) in enumerate(cache.results.items()):
+        assert cols.keys[i] == key
+        assert cols.index[key] == i
+        assert cols.records[i] is r
+        assert cols.charge_list[i] == r.charge_s  # same fixed-order sum
+        assert cols.time_list[i] == r.time_s
+    assert cols.mean_charge == sum(
+        r.charge_s for r in cache.results.values()) / len(cache.results)
+    rows = cols.rows_for(list(cols.keys[:5]) + ["no,such"])
+    assert rows.tolist() == [0, 1, 2, 3, 4, -1]
+
+
+def test_insert_invalidates_columns():
+    cache = _random_cache(5)
+    cols = cache.columns
+    key = "999,999"
+    cache.insert(key, CachedResult("ok", 1e-9, (1e-9,), 0.1))
+    fresh = cache.columns
+    assert fresh is not cols
+    assert key in fresh.index
+    assert len(fresh) == len(cols) + 1
+    # the new optimum is immediately visible through the array view
+    assert fresh.time_s.min() == 1e-9
+
+
+def test_direct_dict_addition_caught_by_length_guard():
+    cache = _random_cache(6)
+    cache.columns
+    cache.results["888,888"] = CachedResult("ok", 2e-9, (2e-9,), 0.1)
+    assert "888,888" in cache.columns.index
+
+
+def test_merged_cache_columns_are_fresh(tmp_path):
+    """merge_shards builds via insert → the columnar view always reflects
+    the final merged result set."""
+    from repro.core.record import ObservationShard, merge_shards
+    space = SearchSpace(tunables_from_dict({"x": (0, 1, 2, 3)}), name="m")
+    paths = []
+    for w in range(2):
+        shard = ObservationShard(str(tmp_path / f"s{w}.jsonl"))
+        shard.ensure_header(ObservationShard.header(
+            "k", "d", space, runner="costmodel", problem={}, repeats=1,
+            worker=w))
+        for cfg in space.valid_configs[w::2]:
+            v = 0.1 * (space.config_id(cfg).count("1") + 1 + w)
+            shard.append(space.config_id(cfg),
+                         CachedResult("ok", v, (v,), 0.2))
+        paths.append(shard.path)
+    cache = merge_shards(paths, space=space)
+    cols = cache.columns
+    assert len(cols) == len(cache.results) == 4
+    for key, r in cache.results.items():
+        assert cols.records[cols.index[key]] is r
+
+
+def test_cachefile_pickles_without_columns():
+    import pickle
+    cache = _random_cache(7)
+    cache.columns
+    clone = pickle.loads(pickle.dumps(cache))
+    assert clone._columns is None  # rebuilt lazily on the other side
+    assert clone.columns.keys == cache.columns.keys
+    assert np.array_equal(clone.columns.charge_s, cache.columns.charge_s)
+
+
+# ------------------------------------------------------------ methodology
+def test_virtual_random_runs_parity_small_and_large():
+    for n, runs in ((64, 200), (2000, 50)):  # crosses the cutover
+        rng = np.random.default_rng(n)
+        vals = rng.lognormal(-6, 0.8, n)
+        vals[rng.random(n) < 0.1] = np.inf
+        charges = rng.uniform(0.1, 2.0, n)
+        a, b = _virtual_random_runs(vals, charges, runs, seed=13)
+        c, d = _virtual_random_runs_scalar(vals, charges, runs, seed=13)
+        assert np.array_equal(a, c) and np.array_equal(b, d)
+
+
+def test_scorer_parity_fields():
+    cache = _random_cache(8)
+    sv = make_scorer(cache, engine="vectorized")
+    ss = make_scorer(cache, engine="scalar")
+    assert sv.budget_s == ss.budget_s
+    assert sv.mean_charge == ss.mean_charge
+    assert sv.optimum == ss.optimum and sv.median == ss.median
+    assert np.array_equal(sv.values, ss.values)
+    assert np.array_equal(sv._imp_times, ss._imp_times)
+    assert np.array_equal(sv._imp_values, ss._imp_values)
+
+
+def test_score_trace_parity_on_real_traces():
+    cache = _random_cache(9)
+    sv = make_scorer(cache, engine="vectorized")
+    ss = make_scorer(cache, engine="scalar")
+    times = sv.sample_times()
+    baseline = sv.baseline_at_time(times)
+    for seed in range(5):
+        runner = SimulationRunner(cache, Budget(max_seconds=sv.budget_s))
+        get_strategy("random_search").run(cache.space, runner,
+                                          random.Random(seed))
+        out_v = sv.score_trace(runner.trace, times, baseline)
+        out_s = ss.score_trace(runner.trace, times, baseline)
+        assert np.array_equal(out_v, out_s)
+
+
+def test_score_trace_empty_and_all_failed_trace():
+    cache = _random_cache(10)
+    sv = make_scorer(cache, engine="vectorized")
+    ss = make_scorer(cache, engine="scalar")
+    times = sv.sample_times(10)
+    assert np.array_equal(sv.score_trace([], times), ss.score_trace([], times))
+    assert np.all(sv.score_trace([], times) == 0.0)
+    # a trace with only failed (inf) observations scores 0 everywhere
+    failed = [(0.5 * (i + 1), math.inf, ("c",)) for i in range(4)]
+    out_v = sv.score_trace(failed, times)
+    out_s = ss.score_trace(failed, times)
+    assert np.array_equal(out_v, out_s)
+    assert np.all(out_v == 0.0)
+
+
+@pytest.mark.parametrize("strategy", BATCH_STRATEGIES)
+def test_end_to_end_scores_bit_identical(strategy):
+    caches = [_random_cache(11), _random_cache(12, n_a=16, fail_frac=0.4)]
+    rep_v = evaluate_strategy(
+        lambda: get_strategy(strategy),
+        [make_scorer(c, engine="vectorized") for c in caches],
+        repeats=4, seed=2)
+    rep_s = evaluate_strategy(
+        lambda: get_strategy(strategy),
+        [make_scorer(c, engine="scalar") for c in caches],
+        repeats=4, seed=2)
+    assert rep_v.score == rep_s.score
+    assert np.array_equal(rep_v.curve, rep_s.curve)
+    assert rep_v.per_space_score == rep_s.per_space_score
+    assert rep_v.fresh_evals == rep_s.fresh_evals
+    assert rep_v.simulated_seconds == rep_s.simulated_seconds
+
+
+def test_deferred_de_still_batches_and_scores():
+    """updating='deferred' is the whole-generation ask/tell variant; it is
+    a different algorithm (snapshot selection) but must run, respect the
+    budget, and stay deterministic."""
+    cache = _random_cache(13)
+
+    def run_once():
+        runner = SimulationRunner(cache, Budget(max_evals=60))
+        get_strategy("differential_evolution", updating="deferred").run(
+            cache.space, runner, random.Random(3))
+        return [(v, c) for _, v, c in runner.trace]
+
+    first = run_once()
+    assert first == run_once()
+    assert len(first) <= 60
+
+
+# ----------------------------------------------------- hypothesis sweep
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_property_random_cache_batch_parity(seed):
+    """Across random caches (failures included): whole-space batch replay
+    through the columnar engine is observation-for-observation identical to
+    the scalar loop, budgets included."""
+    cache = _random_cache(seed % 997, n_a=12, n_b=3,
+                          fail_frac=(seed % 7) / 10.0)
+    if not any(r.status == "ok" for r in cache.results.values()):
+        return  # no replayable optimum; covered by error-path tests
+    configs = cache.space.valid_configs
+    total = sum(r.charge_s for r in cache.results.values())
+    frac = 0.1 + (seed % 13) / 15.0
+    bv = Budget(max_seconds=total * frac)
+    bs = Budget(max_seconds=total * frac)
+    vec = SimulationRunner(cache, bv, columnar=True)
+    sca = SimulationRunner(cache, bs, columnar=False)
+    err_v = err_s = False
+    try:
+        vec.run_batch(configs)
+    except BudgetExhausted:
+        err_v = True
+    try:
+        for c in configs:
+            sca.run(c)
+    except BudgetExhausted:
+        err_s = True
+    assert err_v == err_s
+    assert _observable(vec) == _observable(sca)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_property_scorer_parity(seed):
+    """make_scorer (baseline runs, budget bisection) and P_t sampling agree
+    bit-for-bit between engines on random caches."""
+    cache = _random_cache(seed % 499, n_a=10, n_b=2,
+                          fail_frac=(seed % 5) / 10.0)
+    if not any(r.status == "ok" for r in cache.results.values()):
+        return
+    sv = make_scorer(cache, n_baseline_runs=60, engine="vectorized")
+    ss = make_scorer(cache, n_baseline_runs=60, engine="scalar")
+    assert sv.budget_s == ss.budget_s
+    assert np.array_equal(sv._imp_times, ss._imp_times)
+    times = sv.sample_times(12)
+    runner = SimulationRunner(cache, Budget(max_seconds=sv.budget_s))
+    get_strategy("random_search").run(cache.space, runner,
+                                      random.Random(seed))
+    assert np.array_equal(sv.score_trace(runner.trace, times),
+                          ss.score_trace(runner.trace, times))
