@@ -14,6 +14,16 @@ on. Components:
                    1000-run virtual baseline dominates simulate cold-start)
   campaign         hypertune-style scoring of a small GA+PSO hyperparameter
                    set on hub spaces (end-to-end, warm)
+  drive_many       cross-run ask fusion of the methodology's 25-repeat grid
+                   (the ``core.driver.drive_many`` path): the recorded ask
+                   stream of a real GA grid replayed through ``run_fused``
+                   vs the scalar per-evaluation reference loop. This
+                   isolates the evaluation-resolution layer the fused
+                   driver owns; the component also records the end-to-end
+                   grid walls (``grid_*`` fields), which are bounded at
+                   ~1.2-1.9x by bit-parity itself — the strategies' own
+                   RNG stepping (breeding, shuffles) must replay exactly
+                   (see docs/performance.md "Why not more").
 
 Every component reports vectorized and scalar wall clock plus their ratio
 (``speedup``). The ratio is what CI regresses against: it is measured on
@@ -33,10 +43,12 @@ import time
 
 import numpy as np
 
-from repro.core.budget import Budget
+from repro.core.budget import Budget, BudgetExhausted
 from repro.core.cache import CachedResult, CacheFile
-from repro.core.methodology import evaluate_strategy, make_scorer
-from repro.core.runner import SimulationRunner
+from repro.core.driver import SearchDriver
+from repro.core.methodology import (_repeat_rng, evaluate_strategy,
+                                    make_scorer)
+from repro.core.runner import SimulationRunner, run_fused
 from repro.core.searchspace import SearchSpace
 from repro.core.strategies import get_strategy
 from repro.core.tunable import tunables_from_dict
@@ -44,7 +56,7 @@ from repro.core.tunable import tunables_from_dict
 from .common import FAST
 
 BENCH_FORMAT = "repro-bench-simulate"
-BENCH_VERSION = 1
+BENCH_VERSION = 2  # v2: drive_many component (ask/tell fused driver)
 
 # the campaign component's hyperparameter set: a slice of the Table III
 # grids, small enough for CI, population-shaped so the batch step is on
@@ -209,8 +221,125 @@ def bench_campaign() -> dict:
         scores=scores["vectorized"], score_checksum=checksum)
 
 
+DRIVE_MANY_REPEATS = 25  # the methodology's repeat count (paper Sec. III-B)
+DRIVE_MANY_STRATEGY = "genetic_algorithm"
+
+
+def _harvest_grid_stream(cache: CacheFile, budget_s: float,
+                         seed: int) -> tuple:
+    """Drive one real ``DRIVE_MANY_REPEATS``-run GA grid (the
+    ``drive_many`` path, same per-cell RNG seeding as ``run_repeat``) and
+    record its per-round ask stream plus the reference traces."""
+    scorer_name = f"{cache.kernel}@{cache.device}"
+
+    class _Named:  # _repeat_rng seeds from the scorer's name
+        name = scorer_name
+
+    drivers = [SearchDriver(get_strategy(DRIVE_MANY_STRATEGY), cache.space,
+                            SimulationRunner(cache,
+                                             Budget(max_seconds=budget_s)),
+                            _repeat_rng(_Named, r, seed))
+               for r in range(DRIVE_MANY_REPEATS)]
+    rounds: list[list[tuple[int, list]]] = []
+    active = list(range(len(drivers)))
+    while active:
+        entries = []
+        for i in active:
+            d = drivers[i]
+            configs = d.strategy.ask(d.state)
+            if not configs:
+                d.state.finished = True
+                continue
+            entries.append((i, list(configs)))
+        if not entries:
+            break
+        results = run_fused([(drivers[i].runner, cfgs)
+                             for i, cfgs in entries])
+        survivors = []
+        for (i, cfgs), res in zip(entries, results):
+            if isinstance(res, BudgetExhausted):
+                drivers[i].state.finished = True
+            else:
+                drivers[i].strategy.tell(drivers[i].state, res)
+                survivors.append(i)
+        rounds.append(entries)
+        active = survivors
+    return rounds, [list(d.runner.trace) for d in drivers]
+
+
+def bench_drive_many(caches: "list[CacheFile]") -> dict:
+    """Fused cross-run resolution of the methodology's repeat grid.
+
+    Harvests the per-round ask streams of real GA repeat grids on the hub
+    spaces, then times those exact evaluation streams through (a)
+    ``run_fused`` on columnar runners and (b) the scalar per-evaluation
+    reference loop — asserting observation-for-observation trace parity
+    between the two outside the timed region. The grids' end-to-end walls
+    (strategy stepping included) are recorded as ``grid_*`` extras.
+    """
+    # two grid seeds per space: double the measured stream, halving the
+    # relative timing noise CI gates against
+    harvests = [(c, b, _harvest_grid_stream(c, b, seed))
+                for c, b in ((c, make_scorer(c).budget_s) for c in caches)
+                for seed in (0, 1)]
+    n_evals = sum(len(cfgs) for _, _, (rounds, _) in harvests
+                  for entries in rounds for _, cfgs in entries)
+
+    def replay(columnar: bool) -> list:
+        all_runners = []
+        for cache, budget_s, (rounds, _) in harvests:
+            runners = [SimulationRunner(cache,
+                                        Budget(max_seconds=budget_s),
+                                        columnar=columnar)
+                       for _ in range(DRIVE_MANY_REPEATS)]
+            if columnar:
+                for entries in rounds:
+                    run_fused([(runners[i], cfgs) for i, cfgs in entries])
+            else:
+                for entries in rounds:
+                    for i, cfgs in entries:
+                        run = runners[i].run
+                        try:
+                            for c in cfgs:
+                                run(c)
+                        except BudgetExhausted:
+                            pass
+            all_runners.append(runners)
+        return all_runners
+
+    for columnar in (True, False):  # parity outside the timed region
+        for runners, (_, _, (_, refs)) in zip(replay(columnar), harvests):
+            for runner, ref in zip(runners, refs):
+                assert runner.trace == ref, \
+                    "drive_many parity violation: fused replay diverged"
+    w_vec = _best_of(lambda: replay(True), repeat=9)
+    w_sca = _best_of(lambda: replay(False), repeat=9)
+
+    # -- end-to-end grid walls (strategy stepping included), informational
+    def grid(engine: str, drive: str) -> float:
+        scorers = [make_scorer(c, engine=engine) for c in caches]
+        t0 = time.perf_counter()
+        evaluate_strategy(lambda: get_strategy(DRIVE_MANY_STRATEGY),
+                          scorers, repeats=DRIVE_MANY_REPEATS, seed=0,
+                          drive=drive)
+        return time.perf_counter() - t0
+
+    grid_vec = min(grid("vectorized", "fused") for _ in range(3))
+    grid_sca = min(grid("scalar", "sequential") for _ in range(3))
+    return _component(w_vec, w_sca,
+                      evals_per_sec=n_evals / w_vec,
+                      evals_per_sec_scalar=n_evals / w_sca,
+                      n_evals=n_evals,
+                      n_rounds=sum(len(r) for _, _, (r, _) in harvests),
+                      n_runs=DRIVE_MANY_REPEATS * len(harvests),
+                      strategy=DRIVE_MANY_STRATEGY,
+                      grid_wall_s=grid_vec, grid_wall_s_scalar=grid_sca,
+                      grid_speedup=grid_sca / max(grid_vec, 1e-12))
+
+
 def run_bench() -> dict:
-    big = _hub_caches()[0]  # gemm@tpu_v5e: the largest hub space
+    hub = _hub_caches()
+    big = hub[0]  # gemm@tpu_v5e: the largest hub space
     fresh_c, revisit_c = bench_replay(big)
     report = {
         "format": BENCH_FORMAT,
@@ -222,6 +351,8 @@ def run_bench() -> dict:
             "small_space": SMALL_SPACE_N,
             "campaign_set": [f"{s}:{sorted(hp.items())}"
                              for s, hp in CAMPAIGN_SET],
+            "drive_many": {"repeats": DRIVE_MANY_REPEATS,
+                           "strategy": DRIVE_MANY_STRATEGY},
         },
         "components": {
             "replay_fresh": fresh_c,
@@ -229,6 +360,7 @@ def run_bench() -> dict:
             "score_trace": bench_score_trace(big),
             "baseline_small": bench_baseline_small(),
             "campaign": bench_campaign(),
+            "drive_many": bench_drive_many(hub),
         },
     }
     comp = report["components"]

@@ -37,6 +37,15 @@ import sys
 # shared-runner timing noise on near-1x components)
 MIN_SPEEDUP = 0.9
 
+# per-component hard floors on top of the relative threshold: claims the
+# repo makes about itself that must hold on any runner, not just relative
+# to the committed baseline. drive_many's fused resolution of the
+# methodology grid is ≥2x over the scalar reference by design (the
+# committed baseline shows ~2.2x); the floor sits ~10% under the claim to
+# absorb shared-runner timing noise — a drop below means the fused driver
+# path genuinely regressed.
+COMPONENT_MIN = {"drive_many": 1.8}
+
 
 def _unusable(msg: str) -> SystemExit:
     print(msg, file=sys.stderr)
@@ -80,11 +89,13 @@ def compare(baseline: dict, current: dict, threshold: float) -> list[str]:
         if cur_c is None:
             failures.append(f"component {name!r} missing from current run")
             continue
-        # relative floor, but never below MIN_SPEEDUP: for components whose
-        # baseline ratio is close to 1x (campaign), a purely relative
-        # tolerance would wave through a vectorized engine that has become
-        # outright slower than the scalar reference
-        floor = max(base_c["speedup"] * (1.0 - threshold), MIN_SPEEDUP)
+        # relative floor, but never below MIN_SPEEDUP (or the component's
+        # own hard floor): for components whose baseline ratio is close to
+        # 1x (campaign), a purely relative tolerance would wave through a
+        # vectorized engine that has become outright slower than the
+        # scalar reference
+        floor = max(base_c["speedup"] * (1.0 - threshold),
+                    COMPONENT_MIN.get(name, MIN_SPEEDUP))
         if cur_c["speedup"] < floor:
             failures.append(
                 f"{name}: engine speedup regressed "

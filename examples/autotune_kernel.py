@@ -2,6 +2,12 @@
 then validate the winning configuration in interpret mode against the
 oracle — the full loop the framework uses on its own kernels.
 
+The tuning run goes through the ask/tell ``SearchDriver`` (every strategy
+does since the api redesign): the strategy proposes config batches, the
+cost-model runner satisfies them, the driver owns budget/trace/RNG
+stepping — and the run could be pickled mid-search via
+``driver.snapshot()``.
+
 Run: PYTHONPATH=src python examples/autotune_kernel.py
 """
 import os
@@ -16,6 +22,7 @@ import numpy as np
 
 from repro.core.budget import Budget
 from repro.core.devices import V5E
+from repro.core.driver import SearchDriver
 from repro.core.runner import CostModelRunner
 from repro.core.strategies import get_strategy
 from repro.kernels import gemm
@@ -25,7 +32,8 @@ runner = CostModelRunner(space, gemm.workload(), V5E,
                          Budget(max_evals=150))
 # hyperparameters found by the hypertuner (see EXPERIMENTS.md)
 strategy = get_strategy("greedy_ils", perturbation=2, restart_chance=0.05)
-best = strategy.run(space, runner, random.Random(0))
+driver = SearchDriver(strategy, space, runner, random.Random(0))
+best = driver.run()
 cfg = space.as_dict(best.config)
 print(f"tuned gemm tiling: {cfg}  modelled {best.value*1e3:.3f} ms "
       f"({runner.fresh_evals} evaluations)")

@@ -1,9 +1,11 @@
-"""Quickstart: tune the tuner in two minutes.
+"""Quickstart: tune the tuner in two minutes, through the public facade.
 
 Loads two benchmark-hub search spaces, runs a *parallel, journaled*
 exhaustive hyperparameter campaign of a strategy through the simulation
 mode, and shows the score spread + the tuned configuration (the paper's
-core loop at toy scale). Re-running resumes from the journal instantly.
+core loop at toy scale). Re-running resumes from the journal instantly;
+the closing meta campaign even checkpoints the meta-strategy's SearchState
+so an interrupted run resumes mid-search.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 
@@ -19,35 +21,35 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core.dataset import load_hub
-from repro.core.hypertuner import exhaustive_hypertune, meta_hypertune
-from repro.core.methodology import make_scorer
-from repro.core.parallel import CampaignExecutor, CampaignJournal
+from repro.api import Tuner
 
-# 1. simulation-mode data: two brute-forced search spaces from the hub
-hub = load_hub(kernels=("gemm", "hotspot"), devices=("tpu_v5e",))
-scorers = [make_scorer(c) for c in hub.values()]
-for s in scorers:
-    print(f"space {s.name}: {s.n_total} configs, optimum "
-          f"{s.optimum*1e3:.3f} ms, budget {s.budget_s:.0f} simulated s")
+here = os.path.dirname(__file__)
 
-# 2. exhaustive hyperparameter tuning (Eq. 4) of PSO (Table III grid),
-#    fanned over a worker pool and checkpointed after every configuration
-journal = CampaignJournal(os.path.join(os.path.dirname(__file__),
-                                       "quickstart_pso.jsonl"))
-with CampaignExecutor(workers=os.cpu_count() or 1) as ex:
-    res = exhaustive_hypertune("pso", scorers, repeats=10, seed=0,
-                               executor=ex, journal=journal)
-scores = np.array(res.scores)
-print(f"\n{len(scores)} hyperparameter configs: "
-      f"best {scores.max():+.3f} / mean {scores.mean():+.3f} / "
-      f"worst {scores.min():+.3f}")
-print(f"best hyperparameters: {res.best.hyperparams}")
-print(f"simulated tuning cost {res.simulated_seconds/3600:.1f} h replayed "
-      f"in {res.wall_seconds:.1f} s wall (journal: {journal.path})")
+# one facade over the whole workflow: scoring data (two brute-forced hub
+# spaces), worker pool, methodology settings
+tuner = Tuner(kernels=("gemm", "hotspot"), devices=("tpu_v5e",),
+              repeats=10, seed=0, workers=os.cpu_count() or 1)
+with tuner:
+    for s in tuner.scorers:
+        print(f"space {s.name}: {s.n_total} configs, optimum "
+              f"{s.optimum*1e3:.3f} ms, budget {s.budget_s:.0f} simulated s")
 
-# 3. the same search, driven by a meta-strategy instead of exhaustion
-meta = meta_hypertune("pso", "dual_annealing", scorers,
-                      extended=False, max_hp_evals=12, repeats=10, seed=0)
-print(f"\nmeta-strategy found score {meta.best_score:+.3f} with only "
-      f"{len(meta.evaluated)} of {len(scores)} configs evaluated")
+    # 1. exhaustive hyperparameter tuning (Eq. 4) of PSO (Table III grid),
+    #    fanned over the pool and checkpointed after every configuration
+    run = tuner.hypertune("pso",
+                          journal=os.path.join(here, "quickstart_pso.jsonl"))
+    scores = np.array(run.hypertuning.scores)
+    print(f"\n{len(scores)} hyperparameter configs: "
+          f"best {scores.max():+.3f} / mean {scores.mean():+.3f} / "
+          f"worst {scores.min():+.3f}")
+    print(f"best hyperparameters: {run.best_hyperparams}")
+    print(f"simulated tuning cost {run.simulated_seconds/3600:.1f} h "
+          f"replayed in {run.wall_seconds:.1f} s wall "
+          f"({run.speedup:,.0f}x vs live tuning)")
+
+    # 2. the same search, driven by a meta-strategy instead of exhaustion
+    meta = tuner.meta("pso", "dual_annealing", extended=False,
+                      max_hp_evals=12)
+    print(f"\nmeta-strategy found score {meta.score:+.3f} with only "
+          f"{meta.n_evaluated} of {len(scores)} configs evaluated "
+          f"({meta.simulated_seconds/3600:.1f} simulated h)")

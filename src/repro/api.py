@@ -1,0 +1,282 @@
+"""``repro.api`` — the public facade over the paper's whole workflow.
+
+One object, four verbs (mirroring the session-style facades of
+auto-tuning frameworks like Autotune: heterogeneous machinery behind a
+single entry point):
+
+    from repro.api import Tuner
+
+    tuner = Tuner(kernels=("gemm", "hotspot"), devices=("tpu_v5e",),
+                  repeats=10, workers=4)
+    run = tuner.simulate("pso")                      # score one config
+    run = tuner.hypertune("pso", journal="pso.jsonl")  # Table III campaign
+    run = tuner.meta("pso", "simulated_annealing")   # Eq. 4 meta-tuning
+    run = tuner.record("ssd", runner="costmodel")    # produce a new cache
+
+Every verb returns a ``TuningRun`` — one result type carrying the mode's
+headline numbers (score / best hyperparameters / best kernel config) plus
+the full underlying result object for callers that need the details.
+
+Scoring data resolves lazily from either explicit T4 ``caches`` (paths or
+``CacheFile`` objects) or a benchmark-hub selection, exactly like the CLI's
+``--cache``/``--kernels``/``--devices``/``--split`` options — indeed
+``python -m repro`` is a thin argument parser over this class. Campaign
+execution (worker pools, JSONL journals with resume, the ask/tell
+``SearchDriver`` underneath every strategy run) is wired through
+``core.parallel`` / ``core.driver``; see docs/api.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Mapping, Sequence
+
+from .core.cache import CacheFile
+from .core.hypertuner import (HyperTuningResult, MetaTuningResult,
+                              exhaustive_hypertune, hyperparam_searchspace,
+                              meta_hypertune, score_hyperconfig)
+from .core.methodology import (DEFAULT_CUTOFF, AggregateReport, SpaceScorer,
+                               make_scorer)
+from .core.parallel import CampaignExecutor, CampaignJournal
+
+__all__ = ["Tuner", "TuningRun"]
+
+
+@dataclasses.dataclass
+class TuningRun:
+    """Unified result of one ``Tuner`` verb.
+
+    ``mode`` says which verb produced it; the headline fields are filled
+    when meaningful for that mode and ``None`` otherwise. The full
+    mode-specific result object (``AggregateReport``,
+    ``HyperTuningResult``, ``MetaTuningResult``, or the recorded
+    ``CacheFile``) rides along for detailed consumers.
+    """
+
+    mode: str                      # simulate | hypertune | meta | record
+    strategy: str
+    score: float | None = None             # Eq. 3 aggregate (best, for
+    #                                        campaign modes)
+    best_hyperparams: dict | None = None   # hypertune / meta
+    best_config: dict | None = None        # record: best kernel config
+    best_value: float | None = None        # record: its objective seconds
+    n_evaluated: int | None = None         # configs / hp-configs evaluated
+    wall_seconds: float = 0.0
+    simulated_seconds: float = 0.0         # what live tuning would have cost
+    report: AggregateReport | None = None          # simulate
+    hypertuning: HyperTuningResult | None = None   # hypertune
+    meta: MetaTuningResult | None = None           # meta
+    cache: CacheFile | None = None                 # record
+    cache_path: str | None = None                  # record
+
+    @property
+    def speedup(self) -> float | None:
+        """Simulated-vs-wall speedup (the paper's Fig. 9 headline ratio)."""
+        if not self.simulated_seconds or not self.wall_seconds:
+            return None
+        return self.simulated_seconds / self.wall_seconds
+
+
+class Tuner:
+    """Facade over simulation-mode scoring, hypertuning campaigns,
+    meta-strategies, and cache recording. See the module docstring.
+
+    Construction is cheap; scorers (including their 1000-run virtual
+    baselines) and worker pools are built on first use. Use as a context
+    manager — or call ``close()`` — to tear down pooled workers.
+    """
+
+    def __init__(self,
+                 caches: Sequence[CacheFile | str] | None = None,
+                 kernels: Sequence[str] | None = None,
+                 devices: Sequence[str] | None = None,
+                 split: str = "train",
+                 hub_root: str | None = None,
+                 engine: str = "vectorized",
+                 cutoff: float = DEFAULT_CUTOFF,
+                 repeats: int = 25,
+                 seed: int = 0,
+                 workers: int = 1,
+                 backend: str = "auto",
+                 progress: Callable[[str], None] | None = None):
+        self._caches = list(caches) if caches else None
+        self._kernels = list(kernels) if kernels else None
+        self._devices = list(devices) if devices else None
+        self._split = split
+        self._hub_root = hub_root
+        self.engine = engine
+        self.cutoff = cutoff
+        self.repeats = repeats
+        self.seed = seed
+        self.workers = workers
+        self.backend = backend
+        self.progress = progress
+        self._scorers: list[SpaceScorer] | None = None
+        self._executor: CampaignExecutor | None = None
+
+    # ----------------------------------------------------------- resources
+    @property
+    def scorers(self) -> list[SpaceScorer]:
+        """The scoring contexts (paper Sec. III-B: one per search space),
+        built lazily from the cache/hub selection."""
+        if self._scorers is None:
+            self._scorers = [make_scorer(c, cutoff=self.cutoff,
+                                         engine=self.engine)
+                             for c in self._resolve_caches()]
+        return self._scorers
+
+    def _resolve_caches(self) -> list[CacheFile]:
+        if self._caches is not None:
+            return [c if isinstance(c, CacheFile) else CacheFile.load(c)
+                    for c in self._caches]
+        from .core.dataset import DEFAULT_ROOT, load_hub
+        from .core.devices import TEST_DEVICES, TRAIN_DEVICES
+        devices = self._devices or list(
+            TRAIN_DEVICES if self._split == "train" else TEST_DEVICES)
+        hub = load_hub(self._hub_root or DEFAULT_ROOT,
+                       kernels=self._kernels, devices=devices)
+        if not hub:
+            raise ValueError("no hub spaces matched the selection")
+        return [c for _, c in sorted(hub.items())]
+
+    @property
+    def executor(self) -> CampaignExecutor:
+        if self._executor is None:
+            self._executor = CampaignExecutor(self.workers, self.backend)
+        return self._executor
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown()
+            self._executor = None
+
+    def __enter__(self) -> "Tuner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------------------------------------------- verbs
+    def simulate(self, strategy: str,
+                 hyperparams: Mapping | None = None) -> TuningRun:
+        """Score one strategy configuration with the methodology
+        (Sec. III-B, Eqs. 2–3) across this tuner's spaces."""
+        report = score_hyperconfig(strategy, dict(hyperparams or {}),
+                                   self.scorers, repeats=self.repeats,
+                                   seed=self.seed, executor=self.executor)
+        return TuningRun(mode="simulate", strategy=strategy,
+                         score=report.score, report=report,
+                         n_evaluated=1,
+                         wall_seconds=report.wall_seconds,
+                         simulated_seconds=report.simulated_seconds)
+
+    def hypertune(self, strategy: str,
+                  journal: str | CampaignJournal | None = None) -> TuningRun:
+        """Exhaustive hyperparameter-grid campaign (Sec. IV-B, Table III):
+        parallel over this tuner's workers, resumable via ``journal``."""
+        res = exhaustive_hypertune(strategy, self.scorers,
+                                   repeats=self.repeats, seed=self.seed,
+                                   progress=self.progress,
+                                   executor=self.executor,
+                                   journal=_as_journal(journal))
+        best = res.best
+        # res.wall_seconds is cumulative across journal resumes — the
+        # honest denominator for the Fig. 9 speedup claim
+        return TuningRun(mode="hypertune", strategy=strategy,
+                         score=best.score,
+                         best_hyperparams=dict(best.hyperparams),
+                         n_evaluated=len(res.results),
+                         wall_seconds=res.wall_seconds,
+                         simulated_seconds=res.simulated_seconds,
+                         hypertuning=res)
+
+    def meta(self, strategy: str, meta_strategy: str = "simulated_annealing",
+             extended: bool = True, max_hp_evals: int = 50,
+             meta_hyperparams: Mapping | None = None,
+             journal: str | CampaignJournal | None = None) -> TuningRun:
+        """Meta-strategy hyperparameter optimization (Sec. IV-C, Eq. 4):
+        ``meta_strategy`` explores ``strategy``'s hyperparameter space
+        (Table IV when ``extended``), journaled — including mid-run
+        ``SearchState`` checkpoints — for resume."""
+        res = meta_hypertune(strategy, meta_strategy, self.scorers,
+                             extended=extended, max_hp_evals=max_hp_evals,
+                             repeats=self.repeats, seed=self.seed,
+                             meta_hyperparams=meta_hyperparams,
+                             progress=self.progress, executor=self.executor,
+                             journal=_as_journal(journal))
+        return TuningRun(mode="meta", strategy=strategy,
+                         score=res.best_score,
+                         best_hyperparams=dict(res.best_hyperparams),
+                         n_evaluated=len(res.evaluated),
+                         wall_seconds=res.wall_seconds,  # resume-cumulative
+                         simulated_seconds=res.simulated_seconds,
+                         meta=res)
+
+    def record(self, kernel: str, runner: str = "live",
+               device: str = "cpu_interpret",
+               problem: Mapping | None = None,
+               strategy: str = "random_search",
+               hyperparams: Mapping | None = None,
+               repeats: int = 3, max_evals: int | None = 64,
+               max_seconds: float | None = None,
+               out: str | None = None,
+               bruteforce: bool = False) -> TuningRun:
+        """Record a registered Pallas kernel into a replayable T4 cache
+        (Sec. III-C/D): strategy-sampled by default, exhaustive with
+        ``bruteforce=True``; sharded across this tuner's workers, shards
+        crash-safe and resumable. Returns the merged cache (saved to
+        ``out``) plus the best recorded configuration."""
+        from .core import record as rec
+        from .kernels import get_kernel
+
+        get_kernel(kernel)  # fail fast on unknown kernels
+        t0 = time.perf_counter()
+        spec = rec.RecordSpec.create(
+            kernel, runner=runner, device=device,
+            problem=dict(problem or {}), strategy=strategy,
+            hyperparams=dict(hyperparams or {}), repeats=repeats,
+            max_evals=max_evals, max_seconds=max_seconds, seed=self.seed)
+        out = out or os.path.join("recorded", f"{kernel}@{device}.json.gz")
+        prefix = out
+        for ext in (".json.zst", ".json.gz", ".json"):
+            if prefix.endswith(ext):
+                prefix = prefix[:-len(ext)]
+                break
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        n = max(1, self.workers)
+        task = (rec.bruteforce_shard_task if bruteforce
+                else rec.record_shard_task)
+        argtuples = [(w, n, prefix) for w in range(n)]
+        measured = 0.0
+        for _, summary in self.executor.map(task, argtuples, shared=spec):
+            measured += summary["measured_seconds"]
+            if self.progress:
+                self.progress(
+                    f"worker {summary['worker']}: {summary['recorded']} "
+                    f"recorded (+{summary['resumed']} resumed) "
+                    f"-> {summary['path']}")
+        space = rec.registry_space(kernel, dict(problem or {}))
+        cache = rec.merge_shards(
+            [rec.shard_path(prefix, w) for w in range(n)], space=space,
+            meta={"mode": "bruteforce" if bruteforce else "record"})
+        cache.save(out)
+        best_cfg = best_val = None
+        ok = [(r.time_s, k) for k, r in cache.results.items()
+              if r.status == "ok"]
+        if ok:
+            best_val, key = min(ok)
+            best_cfg = cache.space.as_dict(cache.space.config_from_id(key))
+        return TuningRun(mode="record", strategy=strategy,
+                         best_config=best_cfg, best_value=best_val,
+                         n_evaluated=len(cache.results),
+                         wall_seconds=time.perf_counter() - t0,
+                         simulated_seconds=measured,
+                         cache=cache, cache_path=out)
+
+
+def _as_journal(journal: str | CampaignJournal | None
+                ) -> CampaignJournal | None:
+    if journal is None or isinstance(journal, CampaignJournal):
+        return journal
+    return CampaignJournal(journal)

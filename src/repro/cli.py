@@ -29,17 +29,13 @@ from __future__ import annotations
 
 import argparse
 import ast
-import os
 import sys
-import time
 from typing import Sequence
 
-from .core.cache import CacheFile
+from .api import Tuner
 from .core.hypertuner import (HyperConfigResult, HyperTuningResult,
-                              exhaustive_hypertune, hyperparam_searchspace,
-                              meta_hypertune, score_hyperconfig)
-from .core.methodology import SpaceScorer, make_scorer
-from .core.parallel import CampaignExecutor, CampaignJournal, report_from_json
+                              hyperparam_searchspace)
+from .core.parallel import CampaignJournal, report_from_json
 from .core.strategies import STRATEGIES
 
 
@@ -93,98 +89,86 @@ def _parse_hyperparams(text: str | None) -> dict:
     return out
 
 
-def build_scorers(args) -> list[SpaceScorer]:
-    """Resolve the scoring data (paper Sec. III-B: one scorer per brute-
-    forced search space) from ``--cache`` files or the benchmark hub."""
-    engine = getattr(args, "engine", "vectorized")
-    if args.cache:
-        return [make_scorer(CacheFile.load(p), engine=engine)
-                for p in args.cache]
-    from .core.dataset import DEFAULT_ROOT, load_hub
-    from .core.devices import TEST_DEVICES, TRAIN_DEVICES
-    root = args.hub_root or DEFAULT_ROOT
-    kernels = args.kernels.split(",") if args.kernels else None
-    if args.devices:
-        devices = args.devices.split(",")
-    else:
-        devices = list(TRAIN_DEVICES if args.split == "train"
-                       else TEST_DEVICES)
-    hub = load_hub(root, kernels=kernels, devices=devices)
-    if not hub:
-        raise SystemExit("no hub spaces matched the selection")
-    return [make_scorer(c, engine=engine) for _, c in sorted(hub.items())]
-
-
 def _progress(quiet: bool):
     if quiet:
         return None
     return lambda msg: print(msg, flush=True)
 
 
+def tuner_from_args(args) -> Tuner:
+    """Build the ``repro.api.Tuner`` facade from the shared CLI options
+    (paper Sec. III-B: one scorer per brute-forced search space)."""
+    return Tuner(
+        caches=args.cache or None,
+        kernels=args.kernels.split(",") if args.kernels else None,
+        devices=args.devices.split(",") if args.devices else None,
+        split=args.split,
+        hub_root=args.hub_root,
+        engine=getattr(args, "engine", "vectorized"),
+        repeats=args.repeats,
+        seed=args.seed,
+        workers=args.workers,
+        backend=args.backend,
+        progress=_progress(getattr(args, "quiet", False)),
+    )
+
+
 # -------------------------------------------------------------- subcommands
 def cmd_simulate(args) -> int:
     """Score one strategy configuration (paper Sec. III-B, Eqs. 2–3)."""
-    scorers = build_scorers(args)
-    hp = _parse_hyperparams(args.hyperparams)
-    with CampaignExecutor(args.workers, args.backend) as ex:
-        report = score_hyperconfig(args.strategy, hp, scorers,
-                                   repeats=args.repeats, seed=args.seed,
-                                   executor=ex)
+    with tuner_from_args(args) as tuner:
+        run = tuner.simulate(args.strategy,
+                             _parse_hyperparams(args.hyperparams))
+    report = run.report
     for name, score in sorted(report.per_space_score.items()):
         print(f"  {name:28s} {score:+.4f}")
-    print(f"aggregate score (Eq. 3): {report.score:+.4f}  "
+    print(f"aggregate score (Eq. 3): {run.score:+.4f}  "
           f"[{args.strategy} x{args.repeats} repeats, "
-          f"{len(scorers)} spaces]")
-    print(f"simulated {report.simulated_seconds/3600:.2f} h of tuning in "
+          f"{len(report.per_space_score)} spaces]")
+    print(f"simulated {run.simulated_seconds/3600:.2f} h of tuning in "
           f"{report.wall_seconds:.1f} s wall")
     return 0
 
 
 def cmd_hypertune(args) -> int:
     """Exhaustive hyperparameter tuning (paper Sec. IV-B, Table III)."""
-    scorers = build_scorers(args)
-    journal = CampaignJournal(args.journal) if args.journal else None
-    t0 = time.perf_counter()
-    with CampaignExecutor(args.workers, args.backend) as ex:
-        res = exhaustive_hypertune(args.strategy, scorers,
-                                   repeats=args.repeats, seed=args.seed,
-                                   progress=_progress(args.quiet),
-                                   executor=ex, journal=journal)
-    wall = time.perf_counter() - t0
+    with tuner_from_args(args) as tuner:
+        run = tuner.hypertune(args.strategy, journal=args.journal)
+    res = run.hypertuning
     _print_ranking(res.results, args.top)
     best, avg = res.best, res.closest_to_mean()
     rel = (best.score - avg.score) / max(abs(avg.score), 1e-2)
     print(f"optimal vs average config: {best.score:+.4f} vs {avg.score:+.4f}"
           f" ({100*rel:+.1f}%; paper Sec. IV-B reports +94.8% on average)")
-    print(f"campaign: {len(res.results)} configs, "
-          f"{res.simulated_seconds/3600:.2f} simulated h replayed in "
-          f"{wall:.1f} s wall ({args.workers} workers)")
-    if journal:
-        print(f"journal: {journal.path}")
+    print(f"campaign: {run.n_evaluated} configs, "
+          f"{run.simulated_seconds/3600:.2f} simulated h replayed in "
+          f"{run.wall_seconds:.1f} s wall ({args.workers} workers)")
+    if args.journal:
+        print(f"journal: {args.journal}")
     return 0
 
 
 def cmd_meta(args) -> int:
     """Meta-strategy hyperparameter tuning (paper Sec. IV-C, Eq. 4)."""
-    scorers = build_scorers(args)
-    journal = CampaignJournal(args.journal) if args.journal else None
-    with CampaignExecutor(args.workers, args.backend) as ex:
-        res = meta_hypertune(args.strategy, args.meta_strategy, scorers,
-                             extended=not args.table3_grid,
-                             max_hp_evals=args.max_hp_evals,
-                             repeats=args.repeats, seed=args.seed,
-                             meta_hyperparams=_parse_hyperparams(
-                                 args.meta_hyperparams),
-                             progress=_progress(args.quiet),
-                             executor=ex, journal=journal)
+    with tuner_from_args(args) as tuner:
+        run = tuner.meta(args.strategy, args.meta_strategy,
+                         extended=not args.table3_grid,
+                         max_hp_evals=args.max_hp_evals,
+                         meta_hyperparams=_parse_hyperparams(
+                             args.meta_hyperparams),
+                         journal=args.journal)
     grid = hyperparam_searchspace(args.strategy,
                                   extended=not args.table3_grid)
     print(f"best hyperparameters for {args.strategy} "
-          f"(found by {args.meta_strategy}): {res.best_hyperparams}")
-    print(f"score {res.best_score:+.4f} after {len(res.evaluated)} of "
-          f"{grid.size} grid points ({res.wall_seconds:.1f} s wall)")
-    if journal:
-        print(f"journal: {journal.path}")
+          f"(found by {args.meta_strategy}): {run.best_hyperparams}")
+    print(f"score {run.score:+.4f} after {run.n_evaluated} of "
+          f"{grid.size} grid points ({run.wall_seconds:.1f} s wall)")
+    if run.speedup:
+        print(f"simulated {run.simulated_seconds/3600:.2f} h of tuning "
+              f"replayed in {run.wall_seconds:.1f} s wall "
+              f"({run.speedup:,.0f}x)")
+    if args.journal:
+        print(f"journal: {args.journal}")
     return 0
 
 
@@ -198,6 +182,8 @@ def cmd_report(args) -> int:
     print(f"campaign: {mode} {header.get('strategy')} "
           f"(repeats={header.get('repeats')}, seed={header.get('seed')})")
     print(f"spaces: {', '.join(header.get('spaces', []))}")
+    snapshots = [r for r in records if r.get("type") == "checkpoint"]
+    records = [r for r in records if r.get("type") != "checkpoint"]
     if not records:
         print("no completed evaluations yet")
         return 0
@@ -218,6 +204,9 @@ def cmd_report(args) -> int:
         ranked = sorted(records, key=lambda r: -r["score"])[:args.top]
         for r in ranked:
             print(f"  {r['score']:+.4f}  {r['hp_id']}")
+        if snapshots:
+            print(f"mid-run state snapshots: {len(snapshots)} "
+                  f"(resume continues inside the tuning run)")
         work = 0.0
     done_wall = max(r.get("done_wall", 0.0) for r in records)
     simulated = sum(r["report"]["simulated_seconds"] if "report" in r
@@ -227,80 +216,62 @@ def cmd_report(args) -> int:
         rate = 60.0 * len(records) / done_wall
         print(f"campaign wall: {done_wall:.1f} s "
               f"({rate:.1f} configs/min)")
+        # simulated-vs-wall: the paper's Fig. 9 headline ratio, now
+        # reported for meta campaigns too (MetaTuningResult carries
+        # simulated_seconds since the api redesign)
+        print(f"simulated-vs-wall speedup: {simulated/done_wall:,.0f}x")
     if work and done_wall:
         print(f"aggregate worker compute: {work:.1f} s -> "
               f"average parallelism {work/done_wall:.2f}x")
     return 0
 
 
-def _record_out_paths(args) -> tuple[str, str]:
-    """(cache path, shard prefix) for a recording run."""
-    out = args.out
-    if out is None:
-        out = os.path.join("recorded", f"{args.kernel}@{args.device}.json.gz")
-    prefix = out
-    for ext in (".json.zst", ".json.gz", ".json"):
-        if prefix.endswith(ext):
-            prefix = prefix[:-len(ext)]
-            break
-    return out, prefix
-
-
-def _run_recording(args, task_fn, mode: str) -> int:
-    """Shared driver for ``record``/``bruteforce``: fan one shard per worker
-    out over a CampaignExecutor, then merge shards into the output cache."""
-    from .core import record as rec
+def _run_recording(args, bruteforce: bool) -> int:
+    """``record``/``bruteforce``: fan one shard per worker out through the
+    facade, which merges them into the output cache."""
+    mode = "bruteforce" if bruteforce else "record"
     from .kernels import get_kernel
-
     try:
         get_kernel(args.kernel)  # fail fast on unknown kernels
     except KeyError as e:
-        raise SystemExit(f"error: {e.args[0]}")
-    problem = _parse_hyperparams(getattr(args, "problem", None))
-    spec = rec.RecordSpec.create(
-        args.kernel, runner=args.runner, device=args.device, problem=problem,
-        strategy=getattr(args, "strategy", "random_search"),
-        hyperparams=_parse_hyperparams(getattr(args, "hyperparams", None)),
-        repeats=args.repeats, max_evals=args.max_evals,
-        max_seconds=args.seconds, seed=args.seed)
-    out, prefix = _record_out_paths(args)
-    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-    n = max(1, args.workers)
-    t0 = time.perf_counter()
-    argtuples = [(w, n, prefix) for w in range(n)]
-    with CampaignExecutor(args.workers, args.backend) as ex:
-        for _, summary in ex.map(task_fn, argtuples, shared=spec):
-            print(f"  worker {summary['worker']}: {summary['recorded']} "
-                  f"recorded (+{summary['resumed']} resumed), "
-                  f"{summary['measured_seconds']:.2f} s measured "
-                  f"-> {summary['path']}", flush=True)
-    wall = time.perf_counter() - t0
-    space = rec.registry_space(args.kernel, problem)
-    cache = rec.merge_shards([rec.shard_path(prefix, w) for w in range(n)],
-                             space=space, meta={"mode": mode})
-    cache.save(out)
+        raise SystemExit(f"error: {e.args[0] if e.args else e}")
+    tuner = Tuner(workers=args.workers, backend=args.backend, seed=args.seed,
+                  progress=lambda msg: print(f"  {msg}", flush=True))
+    with tuner:
+        run = tuner.record(
+            args.kernel, runner=args.runner, device=args.device,
+            problem=_parse_hyperparams(getattr(args, "problem", None)),
+            strategy=getattr(args, "strategy", "random_search"),
+            hyperparams=_parse_hyperparams(
+                getattr(args, "hyperparams", None)),
+            repeats=args.repeats, max_evals=args.max_evals,
+            max_seconds=args.seconds, out=args.out,
+            bruteforce=bruteforce)
+    cache = run.cache
     n_ok = cache.meta["n_ok"]
-    total = space.size if space is not None else len(cache.results)
+    total = (cache.space.size if cache.space is not None
+             else len(cache.results))
     print(f"{mode}: {len(cache.results)}/{total} configs recorded "
           f"({n_ok} ok) for {args.kernel}@{args.device} "
-          f"[{args.runner}] in {wall:.1f} s wall ({n} workers)")
-    print(f"cache: {out}")
+          f"[{args.runner}] in {run.wall_seconds:.1f} s wall "
+          f"({max(1, args.workers)} workers)")
+    if run.best_config is not None:
+        print(f"best: {run.best_config} ({run.best_value*1e3:.3f} ms)")
+    print(f"cache: {run.cache_path}")
     print(f"replay: python -m repro simulate --strategy random_search "
-          f"--cache {out}")
+          f"--cache {run.cache_path}")
     return 0
 
 
 def cmd_record(args) -> int:
     """Strategy-sampled recording of a registered kernel (the affordable
     way to turn a live space into simulation data)."""
-    from .core.record import record_shard_task
-    return _run_recording(args, record_shard_task, "record")
+    return _run_recording(args, bruteforce=False)
 
 
 def cmd_bruteforce(args) -> int:
     """Exhaustive recording (paper Table II: brute-forcing the hub)."""
-    from .core.record import bruteforce_shard_task
-    return _run_recording(args, bruteforce_shard_task, "bruteforce")
+    return _run_recording(args, bruteforce=True)
 
 
 def cmd_merge_cache(args) -> int:

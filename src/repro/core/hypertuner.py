@@ -24,13 +24,17 @@ Campaign execution is delegated to ``core.parallel``: both modes accept a
 """
 from __future__ import annotations
 
+import base64
 import dataclasses
 import math
+import pickle
+import random
 import time
 from typing import Callable, Mapping, Sequence
 
 from .budget import Budget
 from .cache import CachedResult, CacheFile
+from .driver import SearchDriver
 from .methodology import AggregateReport, SpaceScorer, evaluate_strategy
 from .parallel import (CampaignExecutor, CampaignJournal, StrategyFactory,
                        campaign_header, report_from_json, report_to_json,
@@ -40,6 +44,13 @@ from .searchspace import SearchSpace
 from .strategies import STRATEGIES, get_strategy
 from .strategies.base import hyperparam_id
 from .tunable import Config, tunables_from_dict
+
+# mid-run checkpoints larger than this are skipped (the campaign still
+# resumes through its memoized per-evaluation records, just replaying the
+# meta-strategy's cheap compute): replay-bridge states grow with the told
+# history, and a scipy-driven meta-strategy can ask tens of thousands of
+# times per run
+MAX_CHECKPOINT_BYTES = 1 << 20
 
 
 def hyperparam_searchspace(strategy_name: str, extended: bool = False) -> SearchSpace:
@@ -128,7 +139,12 @@ def exhaustive_hypertune(strategy_name: str, scorers: Sequence[SpaceScorer],
         header = campaign_header("exhaustive", strategy_name, scorers,
                                  repeats, seed)
         for rec in journal.ensure_header(header):
-            done[rec["hp_id"]] = HyperConfigResult(
+            if rec.get("type") == "checkpoint":
+                continue
+            # journal-compat shim: recompute the id from the stored
+            # hyperparams rather than trusting rec["hp_id"], so journals
+            # written before hyperparam_id escaped ,/=/% resume cleanly
+            done[hyperparam_id(rec["hyperparams"])] = HyperConfigResult(
                 rec["hyperparams"], report_from_json(rec["report"]))
             prior_wall = max(prior_wall, rec.get("done_wall", 0.0))
         if done and progress:
@@ -186,6 +202,7 @@ class MetaTuningResult:
     evaluated: dict                # hp_id -> score
     trace: list                    # FunctionRunner trace (simulated time axis)
     wall_seconds: float
+    simulated_seconds: float = 0.0  # what live tuning would have cost
 
 
 def meta_hypertune(strategy_name: str, meta_strategy_name: str,
@@ -201,24 +218,44 @@ def meta_hypertune(strategy_name: str, meta_strategy_name: str,
     The meta-level is inherently sequential (each proposal depends on the
     previous observation), so ``executor`` parallelizes *within* one
     hyperparameter evaluation (the methodology's space × repeat grid).
-    ``journal`` memoizes completed evaluations: because the objective is
-    deterministic given ``(hyperparams, repeats, seed)``, a resumed campaign
-    replays the meta-strategy's path, serving already-journaled evaluations
-    from the checkpoint and recomputing nothing (paper Sec. IV-C)."""
+
+    ``journal`` makes the campaign resumable at two granularities. Every
+    completed hyperparameter evaluation is memoized (the objective is
+    deterministic given ``(hyperparams, repeats, seed)``), and after each
+    one the meta-strategy's ``SearchState`` + runner state are checkpointed
+    as a pickled snapshot record. A resumed campaign restores the latest
+    snapshot and continues *inside* the tuning run — no meta-strategy
+    replay at all; if no usable snapshot exists (old journal, or the
+    replay log outgrew ``MAX_CHECKPOINT_BYTES``), it falls back to
+    replaying the meta-strategy's cheap compute against the memoized
+    evaluations, recomputing nothing either way (paper Sec. IV-C)."""
     space = hyperparam_searchspace(strategy_name, extended=extended)
     evaluated: dict[str, float] = {}
     memo: dict[str, tuple[float, float]] = {}
     prior_wall = 0.0  # campaign wall already spent before this (resumed) run
+    snapshot_b64: str | None = None
     if journal is not None:
         header = campaign_header("meta", strategy_name, scorers, repeats,
                                  seed, meta_strategy=meta_strategy_name,
                                  extended=extended,
-                                 max_hp_evals=max_hp_evals)
+                                 max_hp_evals=max_hp_evals,
+                                 **({"meta_hyperparams":
+                                     [[k, v] for k, v in
+                                      sorted(meta_hyperparams.items())]}
+                                    if meta_hyperparams else {}))
         for rec in journal.ensure_header(header):
-            memo[rec["hp_id"]] = (rec["score"], rec["simulated_seconds"])
+            if rec.get("type") == "checkpoint":
+                snapshot_b64 = rec["snapshot"]
+                continue
+            # journal-compat shim: ids recomputed from the stored dict (see
+            # exhaustive_hypertune)
+            memo[hyperparam_id(rec["hyperparams"])] = (
+                rec["score"], rec["simulated_seconds"])
             prior_wall = max(prior_wall, rec.get("done_wall", 0.0))
         if memo and progress:
-            progress(f"resumed {len(memo)} evaluations from {journal.path}")
+            progress(f"resumed {len(memo)} evaluations from {journal.path}"
+                     + (" (with mid-run state snapshot)"
+                        if snapshot_b64 else ""))
     t0 = time.perf_counter()
 
     def objective(cfg: Config) -> tuple:
@@ -246,14 +283,38 @@ def meta_hypertune(strategy_name: str, meta_strategy_name: str,
 
     runner = FunctionRunner(space, objective, Budget(max_evals=max_hp_evals))
     meta = get_strategy(meta_strategy_name, **(meta_hyperparams or {}))
-    import random as _random
-    best = meta.run(space, runner, _random.Random(seed))
+    if snapshot_b64 is not None:
+        snap = pickle.loads(base64.b64decode(snapshot_b64))
+        evaluated.update(snap.get("evaluated", {}))
+        driver = SearchDriver.resume(meta, space, runner, snap)
+    else:
+        driver = SearchDriver(meta, space, runner, random.Random(seed))
+
+    last_fresh = runner.fresh_evals
+
+    def checkpoint(d: SearchDriver) -> None:
+        # one snapshot per completed hyperparameter evaluation; generations
+        # that only revisit memoized configs advance nothing worth saving
+        nonlocal last_fresh
+        if journal is None or runner.fresh_evals == last_fresh:
+            return
+        last_fresh = runner.fresh_evals
+        snap = d.snapshot()
+        snap["evaluated"] = dict(evaluated)
+        payload = pickle.dumps(snap, protocol=pickle.HIGHEST_PROTOCOL)
+        if len(payload) > MAX_CHECKPOINT_BYTES:
+            return  # resume will fall back to memoized-evaluation replay
+        journal.append({"type": "checkpoint", "fresh_evals": last_fresh,
+                        "snapshot": base64.b64encode(payload).decode()})
+
+    best = driver.run(checkpoint=checkpoint if journal is not None else None)
     if best is None:
         raise RuntimeError("meta-strategy found no valid hyperparameters")
     return MetaTuningResult(
         strategy_name, meta_strategy_name,
         space.as_dict(best.config), -best.value, evaluated,
-        list(runner.trace), prior_wall + time.perf_counter() - t0)
+        list(runner.trace), prior_wall + time.perf_counter() - t0,
+        simulated_seconds=runner.budget.spent_seconds)
 
 
 # ------------------------------------------------- meta-level methodology

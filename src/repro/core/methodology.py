@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
+import time
 import zlib
 from typing import Callable, Sequence
 
@@ -333,8 +334,7 @@ def run_repeat(scorer: SpaceScorer, make_strategy: Callable[[], Strategy],
     bit-identical curves whether executed serially, on a thread pool, or in
     another process (paper Sec. III-C: simulation results are exactly
     reproducible)."""
-    rng = random.Random((seed * 1_000_003 + repeat)
-                        ^ zlib.crc32(scorer.name.encode()))
+    rng = _repeat_rng(scorer, repeat, seed)
     runner = SimulationRunner(scorer.cache,
                               Budget(max_seconds=scorer.budget_s),
                               columnar=scorer.engine == "vectorized")
@@ -343,6 +343,60 @@ def run_repeat(scorer: SpaceScorer, make_strategy: Callable[[], Strategy],
     return RepeatResult(scorer.score_trace(runner.trace, times, baseline),
                         runner.fresh_evals, runner.wall_seconds,
                         runner.budget.spent_seconds)
+
+
+def _repeat_rng(scorer: SpaceScorer, repeat: int, seed: int) -> random.Random:
+    """The (space, repeat) cell's RNG — one definition shared by the
+    sequential and fused drive paths so they are bit-identical."""
+    return random.Random((seed * 1_000_003 + repeat)
+                         ^ zlib.crc32(scorer.name.encode()))
+
+
+def run_repeats_fused(scorer: SpaceScorer,
+                      make_strategy: Callable[[], Strategy],
+                      repeats: int, seed: int, times: np.ndarray,
+                      baseline: np.ndarray) -> list[RepeatResult]:
+    """All of one space's repeats as concurrent, ask-fused tuning runs.
+
+    Builds one ``SearchDriver`` per repeat (same per-cell RNG seeding as
+    ``run_repeat``) and interleaves them with ``driver.drive_many``: each
+    round's asks resolve as one shared columnar gather instead of
+    ``repeats`` separate ``run_batch`` calls. Per-run observable state —
+    and therefore every curve and score — is bit-identical to the
+    sequential loop; only wall time changes. Per-cell ``wall_seconds`` is
+    an even share of the fused wall (runs overlap, so a per-runner clock
+    would multiple-count).
+    """
+    from .driver import SearchDriver, ThreadBridgeState, drive_many
+    t0 = time.perf_counter()
+    drivers = []
+    for r in range(repeats):
+        strategy = make_strategy()
+        if not hasattr(strategy, "init_state"):
+            # duck-typed strategy exposing only run(space, runner, rng):
+            # no ask/tell to fuse — drive the cells sequentially
+            return [run_repeat(scorer, make_strategy, rr, seed, times,
+                               baseline) for rr in range(repeats)]
+        runner = SimulationRunner(scorer.cache,
+                                  Budget(max_seconds=scorer.budget_s),
+                                  columnar=True)
+        driver = SearchDriver(strategy, scorer.cache.space, runner,
+                              _repeat_rng(scorer, r, seed))
+        if r == 0 and isinstance(driver.state, ThreadBridgeState):
+            # thread-bridged loops (dual_annealing wrapping scipy) pay a
+            # thread rendezvous per evaluation when driven ask/tell-wise;
+            # their direct legacy dispatch in Strategy.run is bit-identical
+            # and much faster, so those cells run sequentially
+            driver.state.close()
+            return [run_repeat(scorer, make_strategy, rr, seed, times,
+                               baseline) for rr in range(repeats)]
+        drivers.append(driver)
+    drive_many(drivers)
+    wall_share = (time.perf_counter() - t0) / max(1, repeats)
+    return [RepeatResult(scorer.score_trace(d.runner.trace, times, baseline),
+                         d.runner.fresh_evals, wall_share,
+                         d.runner.budget.spent_seconds)
+            for d in drivers]
 
 
 def _repeat_cell(ctx: tuple, si: int, r: int) -> RepeatResult:
@@ -358,14 +412,24 @@ def evaluate_strategy(make_strategy: Callable[[], Strategy],
                       repeats: int = 25,
                       n_samples: int = DEFAULT_SAMPLES,
                       seed: int = 0,
-                      executor=None) -> AggregateReport:
+                      executor=None,
+                      drive: str = "auto") -> AggregateReport:
     """Run a strategy ``repeats`` times on every space in simulation mode and
     aggregate performance curves per Eq. 3.
 
     ``executor``: optional ``core.parallel.CampaignExecutor``; the
     (space × repeat) grid is fanned out and reduced in fixed space-major
     order, so the aggregate is bit-identical to the serial loop.
+
+    ``drive`` selects how the in-process grid executes: ``"fused"`` drives
+    each space's repeats as interleaved ask/tell runs with cross-run batch
+    fusion (``run_repeats_fused``), ``"sequential"`` runs one cell at a
+    time (``run_repeat``), and ``"auto"`` (default) fuses whenever the
+    grid runs in-process on vectorized scorers. Scores are bit-identical
+    across all three — fusion only changes wall time.
     """
+    if drive not in ("auto", "fused", "sequential"):
+        raise ValueError(f"unknown drive mode {drive!r}")
     names = [s.name for s in scorers]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate space names in scorers: {names}")
@@ -385,9 +449,16 @@ def evaluate_strategy(make_strategy: Callable[[], Strategy],
                                    chunksize=chunksize):
             cells[i] = res
     else:
-        for i, (si, r) in enumerate(cells_idx):
-            cells[i] = run_repeat(scorers[si], make_strategy, r, seed,
-                                  times[si], baselines[si])
+        for si, scorer in enumerate(scorers):
+            if drive != "sequential" and scorer.engine == "vectorized":
+                cells[si * repeats:(si + 1) * repeats] = run_repeats_fused(
+                    scorer, make_strategy, repeats, seed, times[si],
+                    baselines[si])
+            else:
+                for r in range(repeats):
+                    cells[si * repeats + r] = run_repeat(
+                        scorer, make_strategy, r, seed, times[si],
+                        baselines[si])
     per_space: dict[str, np.ndarray] = {}
     per_space_score: dict[str, float] = {}
     fresh = 0

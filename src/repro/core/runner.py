@@ -44,6 +44,8 @@ import dataclasses
 import time
 from typing import Callable, Protocol, Sequence, runtime_checkable
 
+import numpy as np
+
 from .budget import Budget, BudgetExhausted
 from .cache import CacheFile, CachedResult
 from .costmodel import KernelWorkload, estimate
@@ -146,6 +148,26 @@ class Runner:
     def __call__(self, config: Config) -> float:
         return self.run(config).value
 
+    # ------------------------------------------------------ suspend / resume
+    def state_dict(self) -> dict:
+        """Picklable snapshot of the observable run state (memo, trace,
+        budget spend, fresh-eval count) — what a ``core.driver`` checkpoint
+        persists alongside the strategy's ``SearchState``."""
+        return {"memo": dict(self.memo), "trace": list(self.trace),
+                "fresh_evals": self.fresh_evals,
+                "spent_seconds": self.budget.spent_seconds,
+                "spent_evals": self.budget.spent_evals}
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore a ``state_dict`` snapshot onto this (freshly built)
+        runner; budget *limits* stay as constructed, only the spend is
+        restored."""
+        self.memo = dict(d["memo"])
+        self.trace = list(d["trace"])
+        self.fresh_evals = int(d["fresh_evals"])
+        self.budget.spent_seconds = float(d["spent_seconds"])
+        self.budget.spent_evals = int(d["spent_evals"])
+
     @property
     def best(self) -> Observation | None:
         ok = [o for o in self.memo.values() if o.status == "ok"]
@@ -201,6 +223,29 @@ class SimulationRunner(Runner):
         # result.time_s/status are the authoritative Python scalars; the
         # charge comes from the precomputed column (same value, no re-sum)
         return result, result.time_s, result.status, cols.charge_list[row]
+
+    def _fused_state(self) -> tuple:
+        """Per-runner row-indexed mirrors of the memo for ``run_fused``:
+        ``(seen, obs_by_row)`` boolean/object arrays over the cache's rows.
+        Rebuilt whenever the memo changed outside a fused call (tracked by
+        length — the memo only ever grows) or the columnar view was
+        invalidated, so mixed ``run_batch``/fused usage stays coherent."""
+        cols = self.cache.columns
+        st = getattr(self, "_fused", None)
+        if (st is None or st[2] is not cols
+                or len(self.memo) != getattr(self, "_fused_memo_len", -1)):
+            seen = np.zeros(len(cols), dtype=bool)
+            obs_by_row = np.empty(len(cols), dtype=object)
+            index_get = cols.index.get
+            for key, obs in self.memo.items():
+                row = index_get(key, -1)
+                if row >= 0:
+                    seen[row] = True
+                    obs_by_row[row] = obs
+            st = (seen, obs_by_row, cols)
+            self._fused = st
+            self._fused_memo_len = len(self.memo)
+        return st
 
     # gather granularity: a strategy may hand over far more configs than the
     # budget allows (random search batches the whole space permutation);
@@ -284,6 +329,228 @@ class SimulationRunner(Runner):
             budget.spent_evals = spent_e
             self.fresh_evals = fresh
         return out
+
+
+# one fused gather's key budget: cross-run generation batches (a few dozen
+# runs x a population each) fit comfortably; a whole-space ask replicated
+# across many runs would precompute millions of keys that a budget-capped
+# run never reaches, so oversized fusions fall back to the per-runner
+# chunked path (observably identical either way)
+FUSED_KEY_MAX = 8192
+
+
+def _run_fused_fallback(batches: "Sequence[tuple[Runner, Sequence[Config]]]"
+                        ) -> list:
+    out: list = []
+    for runner, configs in batches:
+        try:
+            out.append(runner.run_batch(configs))
+        except BudgetExhausted as e:
+            out.append(e)
+    return out
+
+
+# below this segment size the vectorized per-segment commit loses to plain
+# bytecode: numpy's per-call overhead (~1-2us x ~14 calls) outweighs the
+# per-evaluation savings for population-sized asks
+FUSED_VECTOR_MIN_SEG = 64
+
+
+def _commit_segment_loop(runner: "SimulationRunner", configs, seg_keys,
+                         cols) -> "list[Observation] | BudgetExhausted":
+    """One runner's segment through the tight scalar commit loop — the
+    body of ``SimulationRunner.run_batch`` minus per-call key computation
+    and chunking (keys arrive precomputed from the fused batch)."""
+    memo = runner.memo
+    memo_get = memo.get
+    budget = runner.budget
+    append = runner.trace.append
+    records = cols.records
+    time_list, charge_list = cols.time_list, cols.charge_list
+    index_get = cols.index.get
+    new_obs = Observation.__new__
+    # budget mirror: same left-to-right float accumulation as Budget.charge,
+    # synced back even when BudgetExhausted aborts the segment mid-way
+    max_s, max_e = budget.max_seconds, budget.max_evals
+    spent_s, spent_e = budget.spent_seconds, budget.spent_evals
+    fresh = runner.fresh_evals
+    mean_charge: float | None = None
+    obs_list: list[Observation] = []
+    out_append = obs_list.append
+    result: object = obs_list
+    try:
+        for key, config in zip(seg_keys, configs):
+            obs = memo_get(key)
+            if obs is None:
+                if (max_s is not None and spent_s >= max_s) or \
+                   (max_e is not None and spent_e >= max_e):
+                    budget.spent_seconds = spent_s
+                    budget.spent_evals = spent_e
+                    budget.check()
+                row = index_get(key, -1)
+                if row >= 0:
+                    rec = records[row]
+                    status = rec.status
+                    value = time_list[row]
+                    charge = charge_list[row]
+                else:
+                    # outside the recorded set: a failed compile at the
+                    # mean charge, exactly like run_batch
+                    if mean_charge is None:
+                        mean_charge = runner.cache.mean_eval_charge()
+                    charge = mean_charge
+                    rec = CachedResult("error", INVALID, (), charge)
+                    status, value = "error", INVALID
+                spent_s += charge
+                spent_e += 1
+                fresh += 1
+                obs = new_obs(Observation)
+                obs.__dict__.update(config=config, value=value,
+                                    status=status, charge_s=charge,
+                                    result=rec)
+                memo[key] = obs
+                append((spent_s, value, config))
+            out_append(obs)
+    except BudgetExhausted as e:
+        result = e
+    finally:
+        budget.spent_seconds = spent_s
+        budget.spent_evals = spent_e
+        runner.fresh_evals = fresh
+    return result
+
+
+def _commit_segment_vectorized(runner: "SimulationRunner", configs, seg_keys,
+                               cols) -> "list[Observation] | BudgetExhausted":
+    """One runner's large segment as whole-array operations: row gather,
+    bitmap freshness (within-segment first occurrence x rows this runner
+    has already evaluated), a cumulative-sum budget seeded with the exact
+    running spend (the same left-to-right float additions as the scalar
+    loop, so exhaustion points and trace times match to the last bit), and
+    bulk zip-built trace extension. Only fresh evaluations construct
+    Observations in Python; revisits gather from the runner's row-indexed
+    object array."""
+    index_get = cols.index.get
+    n = len(configs)
+    rows = np.fromiter((index_get(k, -1) for k in seg_keys),
+                       dtype=np.int64, count=n)
+    if rows.min() < 0:
+        # out-of-recorded-set configs take the keyed imputed-miss path
+        return _commit_segment_loop(runner, configs, seg_keys, cols)
+    seen_rows, obs_by_row, _ = runner._fused_state()
+    order = np.argsort(rows, kind="stable")
+    sorted_rows = rows[order]
+    first_sorted = np.empty(n, dtype=bool)
+    first_sorted[:1] = True
+    first_sorted[1:] = sorted_rows[1:] != sorted_rows[:-1]
+    first_occ = np.empty(n, dtype=bool)
+    first_occ[order] = first_sorted
+    fresh_idx = np.nonzero(first_occ & ~seen_rows[rows])[0]
+    n_fresh = len(fresh_idx)
+    budget = runner.budget
+    max_s, max_e = budget.max_seconds, budget.max_evals
+    cut = n_fresh
+    run_cs = None
+    if n_fresh:
+        fresh_rows = rows[fresh_idx]
+        # seeded sequential cumsum: run_cs[j] is bit-identical to the
+        # scalar loop's spend after j fresh evaluations
+        run_cs = np.empty(n_fresh + 1, dtype=np.float64)
+        run_cs[0] = budget.spent_seconds
+        run_cs[1:] = cols.charge_s[fresh_rows]
+        np.cumsum(run_cs, out=run_cs)
+        if max_s is not None:
+            # exhaustion raises at the first fresh attempt whose spend-so-
+            # far already reaches the cap; run_cs[:-1] is non-decreasing
+            cut = min(cut, int(np.searchsorted(run_cs[:n_fresh], max_s,
+                                               side="left")))
+        if max_e is not None:
+            cut = min(cut, max(0, max_e - budget.spent_evals))
+    exhausted = cut < n_fresh
+    if cut:
+        acc = fresh_idx[:cut]
+        acc_rows = rows[acc]
+        seen_rows[acc_rows] = True
+        vals = cols.time_s[acc_rows].tolist()
+        chgs = cols.charge_s[acc_rows].tolist()
+        cfgs_acc = [configs[j] for j in acc.tolist()]
+        records = cols.records
+        new_obs = Observation.__new__
+        memo = runner.memo
+        obs_acc = []
+        for j, row, cfg, value, charge in zip(acc.tolist(),
+                                              acc_rows.tolist(),
+                                              cfgs_acc, vals, chgs):
+            rec = records[row]
+            obs = new_obs(Observation)
+            obs.__dict__.update(config=cfg, value=value, status=rec.status,
+                                charge_s=charge, result=rec)
+            obs_acc.append(obs)
+            memo[seg_keys[j]] = obs
+        obs_by_row[acc_rows] = obs_acc
+        runner.trace.extend(zip(run_cs[1:cut + 1].tolist(), vals, cfgs_acc))
+        budget.spent_seconds = float(run_cs[cut])
+        budget.spent_evals += cut
+        runner.fresh_evals += cut
+        runner._fused_memo_len = len(memo)
+    if exhausted:
+        try:
+            budget.check()  # same exception/message as the scalar path
+        except BudgetExhausted as exc:
+            return exc
+    return obs_by_row[rows].tolist()
+
+
+def run_fused(batches: "Sequence[tuple[Runner, Sequence[Config]]]"
+              ) -> list:
+    """Resolve several runners' batches in one shared gather.
+
+    ``batches`` is ``[(runner, configs), ...]`` — one entry per concurrent
+    tuning run (see ``driver.drive_many``). Returns one element per entry:
+    the ``list[Observation]`` that ``runner.run_batch(configs)`` would have
+    returned, or the ``BudgetExhausted`` it would have raised (with the
+    runner's committed state — memo, trace, budget — identical in both
+    cases, partial results included).
+
+    When every runner is a columnar ``SimulationRunner`` over the *same*
+    cache, the fusion computes config ids for the whole concatenation in
+    one batched call and commits per runner without any per-run
+    ``run_batch`` call overhead — population-sized segments through a
+    tight scalar loop, large segments (``FUSED_VECTOR_MIN_SEG``+) through
+    whole-array commits (``_commit_segment_vectorized``). Runners are
+    independent (own memo/budget/trace), so per-runner observable order is
+    preserved exactly; anything non-fusable falls back to per-runner
+    ``run_batch`` calls (observably identical either way).
+    """
+    if not batches:
+        return []
+    first = batches[0][0]
+    fusable = isinstance(first, SimulationRunner) and first.columnar
+    if fusable:
+        cache = first.cache
+        fusable = all(isinstance(r, SimulationRunner) and r.columnar
+                      and r.cache is cache for r, _ in batches)
+    total = 0
+    for _, configs in batches:
+        total += len(configs)
+    if not fusable or total == 0 or total > FUSED_KEY_MAX:
+        return _run_fused_fallback(batches)
+    space = first.space
+    cols = first.cache.columns
+    all_cfgs: list = []
+    for _, configs in batches:
+        all_cfgs.extend(configs)
+    keys = space.config_ids(all_cfgs)
+    out: list = []
+    pos = 0
+    for runner, configs in batches:
+        seg_keys = keys[pos:pos + len(configs)]
+        pos += len(configs)
+        commit = (_commit_segment_vectorized
+                  if len(configs) >= FUSED_VECTOR_MIN_SEG
+                  else _commit_segment_loop)
+        out.append(commit(runner, configs, seg_keys, cols))
+    return out
 
 
 class CostModelRunner(Runner):

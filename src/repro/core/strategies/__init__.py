@@ -6,7 +6,7 @@ configured instance; ``PAPER_STRATEGIES`` is the evaluation set of Sec. IV.
 """
 from __future__ import annotations
 
-from .base import Strategy, hyperparam_id
+from .base import GeneratorStrategy, Strategy, hyperparam_id
 from .dual_annealing import DualAnnealing
 from .extra import (BasinHopping, DifferentialEvolution, GreedyILS,
                     MultiStartLocalSearch)
@@ -43,8 +43,8 @@ def get_strategy(name: str, **hyperparams) -> Strategy:
     return cls(**hyperparams)
 
 
-__all__ = ["Strategy", "STRATEGIES", "PAPER_STRATEGIES", "get_strategy",
-           "hyperparam_id", "RandomSearch", "SimulatedAnnealing",
+__all__ = ["Strategy", "GeneratorStrategy", "STRATEGIES", "PAPER_STRATEGIES",
+           "get_strategy", "hyperparam_id", "RandomSearch", "SimulatedAnnealing",
            "DualAnnealing", "GeneticAlgorithm", "ParticleSwarm",
            "DifferentialEvolution", "BasinHopping", "GreedyILS",
            "MultiStartLocalSearch"]

@@ -6,6 +6,13 @@ Kernel Tuner does. The single tuned hyperparameter is the local-search
 Nelder-Mead, BFGS, trust-constr). Positions are rounded/repaired to valid
 configs inside the objective; failures get a large finite penalty so the
 numerical local phases stay well-defined.
+
+scipy owns the control flow (it calls the objective synchronously), so this
+strategy cannot be inverted into a native state machine; it opts into the
+``core.driver`` thread bridge explicitly — the legacy ``_optimize`` loop
+runs on a bridge thread and every objective call becomes one ask/tell
+exchange. The run is still suspendable: the bridge state serializes as a
+replay log (initial RNG state + observations told so far).
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import numpy as np
 import scipy.optimize
 
 from ..budget import BudgetExhausted
+from ..driver import SearchState, legacy_state
 from ..runner import Runner
 from ..searchspace import SearchSpace
 from .base import FAILURE_FITNESS, Strategy
@@ -28,6 +36,11 @@ class DualAnnealing(Strategy):
     DEFAULTS = {"method": "Powell"}
     HYPERPARAM_SPACE = {"method": METHODS}
     EXTENDED_SPACE = {"method": METHODS}
+
+    def init_state(self, space: SearchSpace,
+                   rng: random.Random) -> SearchState:
+        # explicit thread-bridge opt-in: no deprecation warning
+        return legacy_state(self, space, rng)
 
     def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
         method = str(self.hp("method"))

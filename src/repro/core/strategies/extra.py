@@ -5,16 +5,41 @@ here so the hypertuner has a broader pool for meta-strategy experiments:
 Differential Evolution, Basin Hopping, Greedy Iterated Local Search, and
 Multi-start Local Search. Each declares hyperparameter spaces so they are
 first-class citizens of the "tuning the tuner" pipeline.
+
+DE is protocol-native (its generation stepping maps directly onto
+ask/tell); the three local searches are generators (``GeneratorStrategy``):
+imperative walks with each runner call replaced by a yield. GreedyILS and
+MLS scan whole neighborhoods with best-improvement, so they yield the full
+neighbor list as one batch (observably identical to the former per-neighbor
+loop under the BatchRunner contract — and one vectorized gather on a
+simulation runner); BasinHopping's descent is first-improvement and must
+keep yielding one config at a time.
 """
 from __future__ import annotations
 
+import math
 import random
 
 import numpy as np
 
-from ..runner import Runner
+from ..driver import SearchState
 from ..searchspace import SearchSpace
-from .base import Strategy
+from .base import GeneratorStrategy, Strategy
+
+
+class _DEState(SearchState):
+    def __init__(self, space: SearchSpace, rng: random.Random):
+        super().__init__(space, rng)
+        # same rng-stream position as the pre-refactor loop's seeding draw
+        self.np_rng = np.random.default_rng(rng.getrandbits(64))
+        self.lo = np.zeros(len(space.tunables))
+        self.hi = np.array([t.cardinality - 1 for t in space.tunables],
+                           dtype=float)
+        self.pop: np.ndarray | None = None  # None = (re)initialize on ask
+        self.fit: np.ndarray | None = None  # None = initial batch pending
+        self.i = 0    # member index (immediate updating)
+        self.it = 0   # generation index
+        self.asked: tuple | None = None  # (kind, trial(s), configs)
 
 
 class DifferentialEvolution(Strategy):
@@ -22,13 +47,14 @@ class DifferentialEvolution(Strategy):
 
     ``updating`` controls selection semantics (mirrors scipy's
     ``differential_evolution``): ``"immediate"`` (default) updates the
-    population member-by-member within a generation — the original,
-    order-dependent behaviour, kept as the default so existing campaigns
-    replay bit-identically; ``"deferred"`` builds every trial vector from
-    the generation's snapshot and evaluates the whole generation as one
-    ask/tell batch (one vectorized lookup on a simulation runner). It is a
-    DEFAULTS-only knob, not part of ``HYPERPARAM_SPACE`` — adding it to the
-    grid would change every exhaustive campaign's enumeration.
+    population member-by-member within a generation — each ask is a single
+    trial, so later mutants see this generation's accepted trials (the
+    original, order-dependent behaviour, bit-identical to the pre-refactor
+    loop); ``"deferred"`` builds every trial vector from the generation's
+    snapshot and asks the whole generation as one batch (one vectorized
+    lookup on a simulation runner). It is a DEFAULTS-only knob, not part of
+    ``HYPERPARAM_SPACE`` — adding it to the grid would change every
+    exhaustive campaign's enumeration.
     """
 
     name = "differential_evolution"
@@ -47,59 +73,79 @@ class DifferentialEvolution(Strategy):
         "CR": tuple(round(0.1 + 0.1 * i, 1) for i in range(9)),
     }
 
-    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+    def init_state(self, space: SearchSpace, rng: random.Random) -> _DEState:
+        return _DEState(space, rng)
+
+    def _make_trial(self, state: _DEState, i: int,
+                    snapshot: np.ndarray) -> np.ndarray:
+        popsize = max(4, int(self.hp("popsize")))
+        F, CR = float(self.hp("F")), float(self.hp("CR"))
+        np_rng = state.np_rng
+        a, b, c = np_rng.choice(
+            [j for j in range(popsize) if j != i], 3, replace=False)
+        mutant = np.clip(snapshot[a] + F * (snapshot[b] - snapshot[c]),
+                         state.lo, state.hi)
+        cross = np_rng.uniform(size=len(state.lo)) < CR
+        cross[np_rng.integers(len(state.lo))] = True
+        return np.where(cross, mutant, snapshot[i])
+
+    def ask(self, state: _DEState):
+        space, rng = state.space, state.rng
+        popsize = max(4, int(self.hp("popsize")))
+        if state.pop is None:  # start / restart: fresh random population
+            state.pop = np.stack([space.to_indices(space.random_config(rng))
+                                  for _ in range(popsize)])
+            state.fit = None
+            cfgs = space.decode_batch(state.pop, rng)
+            state.asked = ("init", None, cfgs)
+            return cfgs
+        if str(self.hp("updating")) == "deferred":
+            # whole-generation ask: trials come from this generation's
+            # snapshot, selection applies in tell
+            trials = [self._make_trial(state, i, state.pop)
+                      for i in range(popsize)]
+            cfgs = space.decode_batch(np.asarray(trials), rng)
+            state.asked = ("deferred", trials, cfgs)
+            return cfgs
+        # immediate updating: one trial per ask, built against the current
+        # (already part-updated) population
+        trial = self._make_trial(state, state.i, state.pop)
+        cfg = space.nearest_valid(space.from_indices(trial), rng)
+        state.asked = ("immediate", trial, [cfg])
+        return [cfg]
+
+    def tell(self, state: _DEState, observations) -> None:
         popsize = max(4, int(self.hp("popsize")))
         maxiter = int(self.hp("maxiter"))
-        F, CR = float(self.hp("F")), float(self.hp("CR"))
-        deferred = str(self.hp("updating")) == "deferred"
-        np_rng = np.random.default_rng(rng.getrandbits(64))
-        lo = np.zeros(len(space.tunables))
-        hi = np.array([t.cardinality - 1 for t in space.tunables], dtype=float)
-
-        def eval_idx(x) -> float:
-            cfg = space.nearest_valid(space.from_indices(x), rng)
-            return self.fitness(runner(cfg))
-
-        def eval_batch(xs) -> list:
-            # decode + repair vectorized (same rng draw order as the
-            # per-member loop: evaluation draws nothing), one ask/tell batch
-            cfgs = space.decode_batch(np.asarray(xs), rng)
-            return [self.fitness(o.value) for o in runner.run_batch(cfgs)]
-
-        def make_trial(i: int, snapshot: np.ndarray) -> np.ndarray:
-            a, b, c = np_rng.choice(
-                [j for j in range(popsize) if j != i], 3, replace=False)
-            mutant = np.clip(snapshot[a] + F * (snapshot[b] - snapshot[c]),
-                             lo, hi)
-            cross = np_rng.uniform(size=len(lo)) < CR
-            cross[np_rng.integers(len(lo))] = True
-            return np.where(cross, mutant, snapshot[i])
-
-        while True:
-            pop = np.stack([space.to_indices(space.random_config(rng))
-                            for _ in range(popsize)])
-            fit = np.array(eval_batch(pop))
-            for _ in range(maxiter):
-                if deferred:
-                    # whole-generation ask/tell: trials come from this
-                    # generation's snapshot, selection applies afterwards
-                    trials = [make_trial(i, pop) for i in range(popsize)]
-                    fs = eval_batch(trials)
-                    for i, (trial, f) in enumerate(zip(trials, fs)):
-                        if f <= fit[i]:
-                            pop[i], fit[i] = trial, f
-                else:
-                    # immediate updating: later mutants see this
-                    # generation's accepted trials (order-dependent — the
-                    # original semantics, bit-identical to the seed repo)
-                    for i in range(popsize):
-                        trial = make_trial(i, pop)
-                        f = eval_idx(trial)
-                        if f <= fit[i]:
-                            pop[i], fit[i] = trial, f
+        kind, trial, _cfgs = state.asked
+        state.asked = None
+        if kind == "init":
+            state.fit = np.array([self.fitness(o.value)
+                                  for o in observations])
+            state.i = 0
+            state.it = 0
+            return
+        if kind == "deferred":
+            fs = [self.fitness(o.value) for o in observations]
+            for i, (t, f) in enumerate(zip(trial, fs)):
+                if f <= state.fit[i]:
+                    state.pop[i], state.fit[i] = t, f
+            state.it += 1
+            if state.it >= maxiter:
+                state.pop = None
+            return
+        f = self.fitness(observations[0].value)
+        if f <= state.fit[state.i]:
+            state.pop[state.i], state.fit[state.i] = trial, f
+        state.i += 1
+        if state.i >= popsize:
+            state.i = 0
+            state.it += 1
+            if state.it >= maxiter:
+                state.pop = None
 
 
-class BasinHopping(Strategy):
+class BasinHopping(GeneratorStrategy):
     name = "basin_hopping"
     DEFAULTS = {"T": 1.0, "stepsize": 2, "local_iters": 32}
     HYPERPARAM_SPACE = {
@@ -113,12 +159,15 @@ class BasinHopping(Strategy):
         "local_iters": (8, 16, 24, 32, 48, 64, 96, 128),
     }
 
-    def _greedy_descent(self, start, space, runner, max_iters):
-        cur, f_cur = start, self.fitness(runner(start))
+    def _greedy_descent(self, start, space, max_iters):
+        # first-improvement: each neighbor must be observed before deciding
+        # whether to evaluate the next, so this yields one config at a time
+        cur = start
+        f_cur = self.fitness((yield [start])[0].value)
         for _ in range(max_iters):
             improved = False
             for n in space.neighbors(cur, strictly_adjacent=True):
-                f = self.fitness(runner(n))
+                f = self.fitness((yield [n])[0].value)
                 if f < f_cur:
                     cur, f_cur, improved = n, f, True
                     break
@@ -126,13 +175,12 @@ class BasinHopping(Strategy):
                 break
         return cur, f_cur
 
-    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
-        import math
+    def _generate(self, space: SearchSpace, rng: random.Random):
         T = float(self.hp("T"))
         step = int(self.hp("stepsize"))
         local_iters = int(self.hp("local_iters"))
-        cur, f_cur = self._greedy_descent(space.random_config(rng), space,
-                                          runner, local_iters)
+        cur, f_cur = yield from self._greedy_descent(
+            space.random_config(rng), space, local_iters)
         while True:
             # hop: jump `step` positions in value-order on a few tunables
             jumped = list(cur)
@@ -142,13 +190,14 @@ class BasinHopping(Strategy):
                     j = max(0, min(t.cardinality - 1, j))
                     jumped[i] = t.values[j]
             start = space.nearest_valid(tuple(jumped), rng)
-            cand, f_cand = self._greedy_descent(start, space, runner, local_iters)
+            cand, f_cand = yield from self._greedy_descent(start, space,
+                                                           local_iters)
             d_rel = (f_cand - f_cur) / max(abs(f_cur), 1e-30)
             if d_rel <= 0 or rng.random() < math.exp(-d_rel / max(T, 1e-9)):
                 cur, f_cur = cand, f_cand
 
 
-class GreedyILS(Strategy):
+class GreedyILS(GeneratorStrategy):
     name = "greedy_ils"
     DEFAULTS = {"perturbation": 2, "restart_chance": 0.05}
     HYPERPARAM_SPACE = {
@@ -160,20 +209,23 @@ class GreedyILS(Strategy):
         "restart_chance": (0.0, 0.01, 0.02, 0.05, 0.1, 0.2, 0.4),
     }
 
-    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+    def _generate(self, space: SearchSpace, rng: random.Random):
         k = int(self.hp("perturbation"))
         p_restart = float(self.hp("restart_chance"))
         cur = space.random_config(rng)
-        f_cur = self.fitness(runner(cur))
+        f_cur = self.fitness((yield [cur])[0].value)
         while True:
-            # greedy descent to local optimum (best-improvement)
+            # greedy descent to local optimum (best-improvement: the whole
+            # neighborhood is one ask)
             while True:
                 nbrs = space.neighbors(cur)
                 best_n, best_f = None, f_cur
-                for n in nbrs:
-                    f = self.fitness(runner(n))
-                    if f < best_f:
-                        best_n, best_f = n, f
+                if nbrs:
+                    obs = yield nbrs
+                    for n, o in zip(nbrs, obs):
+                        f = self.fitness(o.value)
+                        if f < best_f:
+                            best_n, best_f = n, f
                 if best_n is None:
                     break
                 cur, f_cur = best_n, best_f
@@ -188,27 +240,29 @@ class GreedyILS(Strategy):
                     t = space.tunables[i]
                     out[i] = t.values[rng.randrange(t.cardinality)]
                 cur = space.nearest_valid(tuple(out), rng)
-            f_cur = self.fitness(runner(cur))
+            f_cur = self.fitness((yield [cur])[0].value)
 
 
-class MultiStartLocalSearch(Strategy):
+class MultiStartLocalSearch(GeneratorStrategy):
     name = "mls"
     DEFAULTS = {"adjacent_only": True}
     HYPERPARAM_SPACE = {"adjacent_only": (True, False)}
     EXTENDED_SPACE = {"adjacent_only": (True, False)}
 
-    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+    def _generate(self, space: SearchSpace, rng: random.Random):
         adjacent = bool(self.hp("adjacent_only"))
         while True:
             cur = space.random_config(rng)
-            f_cur = self.fitness(runner(cur))
+            f_cur = self.fitness((yield [cur])[0].value)
             while True:
                 nbrs = space.neighbors(cur, strictly_adjacent=adjacent)
                 best_n, best_f = None, f_cur
-                for n in nbrs:
-                    f = self.fitness(runner(n))
-                    if f < best_f:
-                        best_n, best_f = n, f
+                if nbrs:
+                    obs = yield nbrs
+                    for n, o in zip(nbrs, obs):
+                        f = self.fitness(o.value)
+                        if f < best_f:
+                            best_n, best_f = n, f
                 if best_n is None:
                     break
                 cur, f_cur = best_n, best_f

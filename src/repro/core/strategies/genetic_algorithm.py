@@ -5,6 +5,13 @@ Tuner's (single_point, two_point, uniform, disruptive_uniform), per-gene
 mutation with probability 1/mutation_chance, invalid children repaired to the
 nearest valid config.
 
+Protocol-native: ``ask`` returns the current population (drawing a fresh
+random one at start and after every ``maxiter``-generation restart),
+``tell`` breeds the next one. The RNG draw order — breeding draws in tell,
+(re)initialization draws in the following ask — interleaves with
+evaluations exactly as the pre-refactor loop did, so traces are
+bit-identical.
+
 Hyperparameters:
   method:          crossover operator
   popsize:         population size           {10, 20, 30} / {2 … 50}
@@ -15,7 +22,7 @@ from __future__ import annotations
 
 import random
 
-from ..runner import Runner
+from ..driver import SearchState
 from ..searchspace import SearchSpace
 from .base import Strategy
 
@@ -63,6 +70,13 @@ CROSSOVERS = {
 }
 
 
+class _GAState(SearchState):
+    def __init__(self, space: SearchSpace, rng: random.Random):
+        super().__init__(space, rng)
+        self.pop: list | None = None  # None = (re)initialize on next ask
+        self.gen = 0
+
+
 class GeneticAlgorithm(Strategy):
     name = "genetic_algorithm"
     DEFAULTS = {"method": "uniform", "popsize": 20, "maxiter": 100,
@@ -80,38 +94,52 @@ class GeneticAlgorithm(Strategy):
         "mutation_chance": tuple(range(5, 101, 5)),
     }
 
-    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+    def init_state(self, space: SearchSpace, rng: random.Random) -> _GAState:
+        return _GAState(space, rng)
+
+    def ask(self, state: _GAState):
+        if state.pop is None:
+            popsize = int(self.hp("popsize"))
+            state.pop = [state.space.random_config(state.rng)
+                         for _ in range(popsize)]
+            state.gen = 0
+        # the whole generation is evaluated in one batch (one vectorized
+        # lookup on a simulation runner); population order is preserved, so
+        # the trace — and every downstream score — matches the former
+        # one-config-at-a-time loop
+        return state.pop
+
+    def tell(self, state: _GAState, observations) -> None:
         popsize = int(self.hp("popsize"))
         generations = int(self.hp("maxiter"))
         p_mut = 1.0 / float(self.hp("mutation_chance"))
         crossover = CROSSOVERS[str(self.hp("method"))]
+        space, rng, pop = state.space, state.rng, state.pop
 
-        pop = [space.random_config(rng) for _ in range(popsize)]
-        while True:  # restart loop over full GA runs until budget exhausted
-            for _gen in range(generations):
-                # ask/tell: the whole generation is evaluated in one batch
-                # (one vectorized lookup on a simulation runner); population
-                # order is preserved, so the trace — and every downstream
-                # score — matches the former one-config-at-a-time loop
-                obs = runner.run_batch(pop)
-                scored = sorted(((self.fitness(o.value), i, c)
-                                 for i, (o, c) in enumerate(zip(obs, pop))),
-                                key=lambda t: (t[0], t[1]))
-                ranked = [c for _, _, c in scored]
-                # rank weights: best gets weight popsize, worst gets 1
-                weights = list(range(popsize, 0, -1))
-                children: list[tuple] = [ranked[0]]  # elitism: keep the best
-                while len(children) < popsize:
-                    a, b = rng.choices(ranked, weights=weights, k=2)
-                    c1, c2 = crossover(a, b, rng)
-                    for child in (c1, c2):
-                        child = self._mutate(child, space, rng, p_mut)
-                        child = space.nearest_valid(child, rng)
-                        children.append(child)
-                        if len(children) >= popsize:
-                            break
-                pop = children
-            pop = [space.random_config(rng) for _ in range(popsize)]
+        scored = sorted(((self.fitness(o.value), i, c)
+                         for i, (o, c) in enumerate(zip(observations, pop))),
+                        key=lambda t: (t[0], t[1]))
+        ranked = [c for _, _, c in scored]
+        # rank weights: best gets weight popsize, worst gets 1
+        weights = list(range(popsize, 0, -1))
+        children: list[tuple] = [ranked[0]]  # elitism: keep the best
+        while len(children) < popsize:
+            a, b = rng.choices(ranked, weights=weights, k=2)
+            c1, c2 = crossover(a, b, rng)
+            for child in (c1, c2):
+                child = self._mutate(child, space, rng, p_mut)
+                child = space.nearest_valid(child, rng)
+                children.append(child)
+                if len(children) >= popsize:
+                    break
+        state.gen += 1
+        if state.gen >= generations:
+            # restart: the bred children are discarded and the next ask
+            # draws a fresh random population — the same draws, in the same
+            # order, as the pre-refactor restart loop
+            state.pop = None
+        else:
+            state.pop = children
 
     @staticmethod
     def _mutate(config: tuple, space: SearchSpace, rng: random.Random,

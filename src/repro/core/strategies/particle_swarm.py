@@ -6,6 +6,13 @@ the inertia ``w`` to have no meaningful effect (Kruskal-Wallis / mutual
 information sensitivity test, Sec. IV-A) and excludes it from tuning; it
 remains available as a hyperparameter with its Kernel Tuner default.
 
+Protocol-native: ``ask`` decodes the swarm's positions to one config batch
+(initializing positions/velocities at start and after each restart);
+``tell`` updates personal/global bests and steps velocities. Decode repairs
+draw from the run RNG in ask and velocity updates draw from the numpy
+generator in tell — the same interleaving as the pre-refactor loop, so
+traces are bit-identical.
+
 Hyperparameters:
   popsize: swarm size                {10, 20, 30} / {2 … 50}
   maxiter: iterations                {50, 100, 150} / {10 … 200}
@@ -19,9 +26,26 @@ import random
 
 import numpy as np
 
-from ..runner import Runner
+from ..driver import SearchState
 from ..searchspace import SearchSpace
 from .base import Strategy
+
+
+class _PSOState(SearchState):
+    def __init__(self, space: SearchSpace, rng: random.Random):
+        super().__init__(space, rng)
+        # drawn here — at the same point in the rng stream as the
+        # pre-refactor loop drew it (top of _optimize)
+        self.np_rng = np.random.default_rng(rng.getrandbits(64))
+        self.lo = np.zeros(len(space.tunables))
+        self.hi = np.array([t.cardinality - 1 for t in space.tunables],
+                           dtype=float)
+        self.span = np.maximum(self.hi - self.lo, 1.0)
+        self.pos: np.ndarray | None = None  # None = (re)initialize on ask
+        self.vel = self.pbest = self.pbest_f = self.gbest = None
+        self.gbest_f = np.inf
+        self.it = 0
+        self.asked: list | None = None  # decoded configs of the open ask
 
 
 class ParticleSwarm(Strategy):
@@ -40,39 +64,47 @@ class ParticleSwarm(Strategy):
         "c2": tuple(round(0.5 + 0.25 * i, 2) for i in range(7)),
     }
 
-    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
-        popsize = int(self.hp("popsize"))
-        maxiter = int(self.hp("maxiter"))
-        c1, c2, w = float(self.hp("c1")), float(self.hp("c2")), float(self.hp("w"))
-        np_rng = np.random.default_rng(rng.getrandbits(64))
+    def init_state(self, space: SearchSpace, rng: random.Random) -> _PSOState:
+        return _PSOState(space, rng)
 
-        lo = np.zeros(len(space.tunables))
-        hi = np.array([t.cardinality - 1 for t in space.tunables], dtype=float)
-        span = np.maximum(hi - lo, 1.0)
+    def ask(self, state: _PSOState):
+        space, rng = state.space, state.rng
+        if state.pos is None:  # start / post-restart initialization
+            popsize = int(self.hp("popsize"))
+            state.pos = np.stack([space.to_indices(space.random_config(rng))
+                                  for _ in range(popsize)])
+            state.vel = (state.np_rng.uniform(-1, 1, state.pos.shape)
+                         * state.span * 0.25)
+            state.pbest = state.pos.copy()
+            state.pbest_f = np.full(popsize, np.inf)
+            state.gbest, state.gbest_f = state.pos[0].copy(), np.inf
+            state.it = 0
+        # decode + repair the whole swarm in one vectorized call (repairs
+        # draw from rng exactly as the per-particle loop did)
+        state.asked = space.decode_batch(state.pos, rng)
+        return state.asked
 
-        while True:  # restart loop until budget exhausted
-            pos = np.stack([space.to_indices(space.random_config(rng))
-                            for _ in range(popsize)])
-            vel = np_rng.uniform(-1, 1, pos.shape) * span * 0.25
-            pbest = pos.copy()
-            pbest_f = np.full(popsize, np.inf)
-            gbest, gbest_f = pos[0].copy(), np.inf
-            for _ in range(maxiter):
-                # ask/tell: decode + repair the whole swarm in one vectorized
-                # call (same rng draw order as the former interleaved loop —
-                # evaluation draws nothing), then evaluate it as one batch
-                cfgs = space.decode_batch(pos, rng)
-                obs = runner.run_batch(cfgs)
-                for i, (o, cfg) in enumerate(zip(obs, cfgs)):
-                    f = self.fitness(o.value)
-                    if f < pbest_f[i]:
-                        pbest_f[i] = f
-                        pbest[i] = space.to_indices(cfg)
-                    if f < gbest_f:
-                        gbest_f = f
-                        gbest = space.to_indices(cfg)
-                r1 = np_rng.uniform(size=pos.shape)
-                r2 = np_rng.uniform(size=pos.shape)
-                vel = w * vel + c1 * r1 * (pbest - pos) + c2 * r2 * (gbest - pos)
-                vel = np.clip(vel, -span, span)
-                pos = np.clip(pos + vel, lo, hi)
+    def tell(self, state: _PSOState, observations) -> None:
+        space = state.space
+        c1, c2 = float(self.hp("c1")), float(self.hp("c2"))
+        w = float(self.hp("w"))
+        for i, (o, cfg) in enumerate(zip(observations, state.asked)):
+            f = self.fitness(o.value)
+            if f < state.pbest_f[i]:
+                state.pbest_f[i] = f
+                state.pbest[i] = space.to_indices(cfg)
+            if f < state.gbest_f:
+                state.gbest_f = f
+                state.gbest = space.to_indices(cfg)
+        state.asked = None
+        np_rng, pos = state.np_rng, state.pos
+        r1 = np_rng.uniform(size=pos.shape)
+        r2 = np_rng.uniform(size=pos.shape)
+        vel = (w * state.vel + c1 * r1 * (state.pbest - pos)
+               + c2 * r2 * (state.gbest - pos))
+        vel = np.clip(vel, -state.span, state.span)
+        state.vel = vel
+        state.pos = np.clip(pos + vel, state.lo, state.hi)
+        state.it += 1
+        if state.it >= int(self.hp("maxiter")):
+            state.pos = None  # restart from fresh random positions

@@ -3,22 +3,38 @@ from __future__ import annotations
 
 import random
 
-from ..runner import Runner
+from ..driver import SearchState
 from ..searchspace import SearchSpace
 from .base import Strategy
+
+
+class _RandomSearchState(SearchState):
+    def __init__(self, space: SearchSpace, rng: random.Random):
+        super().__init__(space, rng)
+        self.asked = False
 
 
 class RandomSearch(Strategy):
     name = "random_search"
     DEFAULTS: dict = {}
 
-    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+    def init_state(self, space: SearchSpace,
+                   rng: random.Random) -> _RandomSearchState:
+        return _RandomSearchState(space, rng)
+
+    def ask(self, state: _RandomSearchState):
         # Sample *without replacement* over valid configs (Kernel Tuner
-        # semantics: the tuner cache makes revisits free, so random search is
-        # effectively a random permutation of the space). The whole
-        # permutation goes through the runner as ONE batch: a vectorized
-        # runner resolves it in a single columnar gather, and budget
-        # exhaustion stops it at exactly the same config as the scalar loop.
-        order = list(space.valid_configs)
-        rng.shuffle(order)
-        runner.run_batch(order)
+        # semantics: the tuner cache makes revisits free, so random search
+        # is effectively a random permutation of the space). The whole
+        # permutation is ONE ask: a vectorized runner resolves it in a
+        # single columnar gather, and budget exhaustion stops it at exactly
+        # the same config as the scalar loop.
+        if state.asked:
+            return None  # the permutation survived the budget: we are done
+        state.asked = True
+        order = list(state.space.valid_configs)
+        state.rng.shuffle(order)
+        return order
+
+    def tell(self, state: _RandomSearchState, observations) -> None:
+        pass  # best-so-far tracking lives in the runner's trace

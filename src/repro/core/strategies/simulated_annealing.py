@@ -6,6 +6,11 @@ random config whenever T reaches T_min (budget permitting). Δrel is the
 *relative* objective difference so that temperature values are comparable
 across search spaces whose objectives differ by orders of magnitude.
 
+Written as a generator (``GeneratorStrategy``): the walk reads exactly like
+the pre-refactor imperative loop with each runner call replaced by a yield;
+the generator bridge turns it into ask/tell and keeps the run suspendable
+through its replay log.
+
 Hyperparameters (matching the paper):
   T:        initial temperature            {0.5, 1.0, 1.5} / {0.1 … 2.0}
   T_min:    restart temperature            {1e-4, 1e-3, 1e-2} / {1e-4 … 0.1}
@@ -17,12 +22,11 @@ from __future__ import annotations
 import math
 import random
 
-from ..runner import Runner
 from ..searchspace import SearchSpace
-from .base import Strategy
+from .base import GeneratorStrategy
 
 
-class SimulatedAnnealing(Strategy):
+class SimulatedAnnealing(GeneratorStrategy):
     name = "simulated_annealing"
     DEFAULTS = {"T": 1.0, "T_min": 0.001, "alpha": 0.995, "maxiter": 2}
     HYPERPARAM_SPACE = {
@@ -38,7 +42,7 @@ class SimulatedAnnealing(Strategy):
         "maxiter": tuple(range(1, 11)),
     }
 
-    def _optimize(self, space: SearchSpace, runner: Runner, rng: random.Random) -> None:
+    def _generate(self, space: SearchSpace, rng: random.Random):
         T0 = float(self.hp("T"))
         T_min = float(self.hp("T_min"))
         alpha = float(self.hp("alpha"))
@@ -46,17 +50,17 @@ class SimulatedAnnealing(Strategy):
 
         while True:  # restart loop; terminated by BudgetExhausted
             current = space.random_config(rng)
-            f_cur = self.fitness(runner(current))
+            f_cur = self.fitness((yield [current])[0].value)
             T = T0
             while T > T_min:
                 for _ in range(maxiter):
                     nbrs = space.neighbors(current)
                     if not nbrs:
                         current = space.random_config(rng)
-                        f_cur = self.fitness(runner(current))
+                        f_cur = self.fitness((yield [current])[0].value)
                         continue
                     cand = nbrs[rng.randrange(len(nbrs))]
-                    f_new = self.fitness(runner(cand))
+                    f_new = self.fitness((yield [cand])[0].value)
                     d_rel = (f_new - f_cur) / max(abs(f_cur), 1e-30)
                     if d_rel <= 0 or rng.random() < math.exp(-d_rel / max(T, 1e-9)):
                         current, f_cur = cand, f_new

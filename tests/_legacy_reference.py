@@ -1,0 +1,355 @@
+"""Frozen pre-refactor strategy loops — the ask/tell parity oracle.
+
+These are verbatim copies of the imperative ``Strategy._optimize`` bodies as
+they existed before the ask/tell protocol redesign (PR 4), inlined with
+their helpers so that nothing here can drift when the real strategies
+evolve. ``tests/test_protocol.py`` runs every registered strategy through
+the new ``SearchDriver`` path and asserts the observable runner state
+(trace, memo, budget, fresh_evals) is bit-identical to these loops.
+
+Deliberately self-contained: only SearchSpace/Runner machinery (whose
+semantics the redesign does not touch) is shared with ``src/``.
+"""
+from __future__ import annotations
+
+import math
+import random
+
+import numpy as np
+
+from repro.core.budget import BudgetExhausted
+
+FAILURE_FITNESS = 1e12
+
+
+def _fitness(value: float) -> float:
+    return FAILURE_FITNESS if value == float("inf") else value
+
+
+# ------------------------------------------------------------ random search
+def _rs(hp, space, runner, rng):
+    order = list(space.valid_configs)
+    rng.shuffle(order)
+    runner.run_batch(order)
+
+
+# -------------------------------------------------------------------- GA
+def _single_point(a, b, rng):
+    if len(a) < 2:
+        return a, b
+    p = rng.randrange(1, len(a))
+    return a[:p] + b[p:], b[:p] + a[p:]
+
+
+def _two_point(a, b, rng):
+    if len(a) < 3:
+        return _single_point(a, b, rng)
+    p, q = sorted(rng.sample(range(1, len(a)), 2))
+    return (a[:p] + b[p:q] + a[q:], b[:p] + a[p:q] + b[q:])
+
+
+def _uniform(a, b, rng):
+    c1, c2 = list(a), list(b)
+    for i in range(len(a)):
+        if rng.random() < 0.5:
+            c1[i], c2[i] = c2[i], c1[i]
+    return tuple(c1), tuple(c2)
+
+
+def _disruptive_uniform(a, b, rng):
+    diff = [i for i in range(len(a)) if a[i] != b[i]]
+    rng.shuffle(diff)
+    k = max((len(diff) + 1) // 2, min(1, len(diff)))
+    c1, c2 = list(a), list(b)
+    for i in diff[:k]:
+        c1[i], c2[i] = c2[i], c1[i]
+    return tuple(c1), tuple(c2)
+
+
+_CROSSOVERS = {
+    "single_point": _single_point,
+    "two_point": _two_point,
+    "uniform": _uniform,
+    "disruptive_uniform": _disruptive_uniform,
+}
+
+
+def _ga_mutate(config, space, rng, p_mut):
+    out = list(config)
+    for i, t in enumerate(space.tunables):
+        if rng.random() < p_mut:
+            out[i] = t.values[rng.randrange(t.cardinality)]
+    return tuple(out)
+
+
+def _ga(hp, space, runner, rng):
+    popsize = int(hp["popsize"])
+    generations = int(hp["maxiter"])
+    p_mut = 1.0 / float(hp["mutation_chance"])
+    crossover = _CROSSOVERS[str(hp["method"])]
+
+    pop = [space.random_config(rng) for _ in range(popsize)]
+    while True:
+        for _gen in range(generations):
+            obs = runner.run_batch(pop)
+            scored = sorted(((_fitness(o.value), i, c)
+                             for i, (o, c) in enumerate(zip(obs, pop))),
+                            key=lambda t: (t[0], t[1]))
+            ranked = [c for _, _, c in scored]
+            weights = list(range(popsize, 0, -1))
+            children = [ranked[0]]
+            while len(children) < popsize:
+                a, b = rng.choices(ranked, weights=weights, k=2)
+                c1, c2 = crossover(a, b, rng)
+                for child in (c1, c2):
+                    child = _ga_mutate(child, space, rng, p_mut)
+                    child = space.nearest_valid(child, rng)
+                    children.append(child)
+                    if len(children) >= popsize:
+                        break
+            pop = children
+        pop = [space.random_config(rng) for _ in range(popsize)]
+
+
+# -------------------------------------------------------------------- PSO
+def _pso(hp, space, runner, rng):
+    popsize = int(hp["popsize"])
+    maxiter = int(hp["maxiter"])
+    c1, c2, w = float(hp["c1"]), float(hp["c2"]), float(hp["w"])
+    np_rng = np.random.default_rng(rng.getrandbits(64))
+
+    lo = np.zeros(len(space.tunables))
+    hi = np.array([t.cardinality - 1 for t in space.tunables], dtype=float)
+    span = np.maximum(hi - lo, 1.0)
+
+    while True:
+        pos = np.stack([space.to_indices(space.random_config(rng))
+                        for _ in range(popsize)])
+        vel = np_rng.uniform(-1, 1, pos.shape) * span * 0.25
+        pbest = pos.copy()
+        pbest_f = np.full(popsize, np.inf)
+        gbest, gbest_f = pos[0].copy(), np.inf
+        for _ in range(maxiter):
+            cfgs = space.decode_batch(pos, rng)
+            obs = runner.run_batch(cfgs)
+            for i, (o, cfg) in enumerate(zip(obs, cfgs)):
+                f = _fitness(o.value)
+                if f < pbest_f[i]:
+                    pbest_f[i] = f
+                    pbest[i] = space.to_indices(cfg)
+                if f < gbest_f:
+                    gbest_f = f
+                    gbest = space.to_indices(cfg)
+            r1 = np_rng.uniform(size=pos.shape)
+            r2 = np_rng.uniform(size=pos.shape)
+            vel = w * vel + c1 * r1 * (pbest - pos) + c2 * r2 * (gbest - pos)
+            vel = np.clip(vel, -span, span)
+            pos = np.clip(pos + vel, lo, hi)
+
+
+# --------------------------------------------------------------------- DE
+def _de(hp, space, runner, rng):
+    popsize = max(4, int(hp["popsize"]))
+    maxiter = int(hp["maxiter"])
+    F, CR = float(hp["F"]), float(hp["CR"])
+    deferred = str(hp["updating"]) == "deferred"
+    np_rng = np.random.default_rng(rng.getrandbits(64))
+    lo = np.zeros(len(space.tunables))
+    hi = np.array([t.cardinality - 1 for t in space.tunables], dtype=float)
+
+    def eval_idx(x):
+        cfg = space.nearest_valid(space.from_indices(x), rng)
+        return _fitness(runner(cfg))
+
+    def eval_batch(xs):
+        cfgs = space.decode_batch(np.asarray(xs), rng)
+        return [_fitness(o.value) for o in runner.run_batch(cfgs)]
+
+    def make_trial(i, snapshot):
+        a, b, c = np_rng.choice(
+            [j for j in range(popsize) if j != i], 3, replace=False)
+        mutant = np.clip(snapshot[a] + F * (snapshot[b] - snapshot[c]),
+                         lo, hi)
+        cross = np_rng.uniform(size=len(lo)) < CR
+        cross[np_rng.integers(len(lo))] = True
+        return np.where(cross, mutant, snapshot[i])
+
+    while True:
+        pop = np.stack([space.to_indices(space.random_config(rng))
+                        for _ in range(popsize)])
+        fit = np.array(eval_batch(pop))
+        for _ in range(maxiter):
+            if deferred:
+                trials = [make_trial(i, pop) for i in range(popsize)]
+                fs = eval_batch(trials)
+                for i, (trial, f) in enumerate(zip(trials, fs)):
+                    if f <= fit[i]:
+                        pop[i], fit[i] = trial, f
+            else:
+                for i in range(popsize):
+                    trial = make_trial(i, pop)
+                    f = eval_idx(trial)
+                    if f <= fit[i]:
+                        pop[i], fit[i] = trial, f
+
+
+# --------------------------------------------------------------------- SA
+def _sa(hp, space, runner, rng):
+    T0 = float(hp["T"])
+    T_min = float(hp["T_min"])
+    alpha = float(hp["alpha"])
+    maxiter = int(hp["maxiter"])
+
+    while True:
+        current = space.random_config(rng)
+        f_cur = _fitness(runner(current))
+        T = T0
+        while T > T_min:
+            for _ in range(maxiter):
+                nbrs = space.neighbors(current)
+                if not nbrs:
+                    current = space.random_config(rng)
+                    f_cur = _fitness(runner(current))
+                    continue
+                cand = nbrs[rng.randrange(len(nbrs))]
+                f_new = _fitness(runner(cand))
+                d_rel = (f_new - f_cur) / max(abs(f_cur), 1e-30)
+                if d_rel <= 0 or rng.random() < math.exp(-d_rel / max(T, 1e-9)):
+                    current, f_cur = cand, f_new
+            T *= alpha
+
+
+# ----------------------------------------------------------- dual annealing
+def _dual_annealing(hp, space, runner, rng):
+    import scipy.optimize
+
+    method = str(hp["method"])
+    bounds = space.bounds
+    bounds = [(lo, hi if hi > lo else lo + 1e-6) for lo, hi in bounds]
+
+    def objective(x):
+        cfg = space.nearest_valid(space.from_indices(x), rng)
+        v = runner(cfg)
+        return FAILURE_FITNESS if v == float("inf") else v
+
+    while True:
+        try:
+            scipy.optimize.dual_annealing(
+                objective, bounds,
+                minimizer_kwargs={"method": method},
+                seed=rng.getrandbits(32),
+                maxiter=1000,
+            )
+        except BudgetExhausted:
+            raise
+        except Exception:
+            continue
+
+
+# ------------------------------------------------------------ basin hopping
+def _bh_greedy_descent(start, space, runner, max_iters):
+    cur, f_cur = start, _fitness(runner(start))
+    for _ in range(max_iters):
+        improved = False
+        for n in space.neighbors(cur, strictly_adjacent=True):
+            f = _fitness(runner(n))
+            if f < f_cur:
+                cur, f_cur, improved = n, f, True
+                break
+        if not improved:
+            break
+    return cur, f_cur
+
+
+def _basin_hopping(hp, space, runner, rng):
+    T = float(hp["T"])
+    step = int(hp["stepsize"])
+    local_iters = int(hp["local_iters"])
+    cur, f_cur = _bh_greedy_descent(space.random_config(rng), space,
+                                    runner, local_iters)
+    while True:
+        jumped = list(cur)
+        for i, t in enumerate(space.tunables):
+            if rng.random() < 0.5:
+                j = t.index_of(jumped[i]) + rng.choice((-step, step))
+                j = max(0, min(t.cardinality - 1, j))
+                jumped[i] = t.values[j]
+        start = space.nearest_valid(tuple(jumped), rng)
+        cand, f_cand = _bh_greedy_descent(start, space, runner, local_iters)
+        d_rel = (f_cand - f_cur) / max(abs(f_cur), 1e-30)
+        if d_rel <= 0 or rng.random() < math.exp(-d_rel / max(T, 1e-9)):
+            cur, f_cur = cand, f_cand
+
+
+# -------------------------------------------------------------- greedy ILS
+def _greedy_ils(hp, space, runner, rng):
+    k = int(hp["perturbation"])
+    p_restart = float(hp["restart_chance"])
+    cur = space.random_config(rng)
+    f_cur = _fitness(runner(cur))
+    while True:
+        while True:
+            nbrs = space.neighbors(cur)
+            best_n, best_f = None, f_cur
+            for n in nbrs:
+                f = _fitness(runner(n))
+                if f < best_f:
+                    best_n, best_f = n, f
+            if best_n is None:
+                break
+            cur, f_cur = best_n, best_f
+        if rng.random() < p_restart:
+            cur = space.random_config(rng)
+        else:
+            out = list(cur)
+            idxs = rng.sample(range(len(space.tunables)),
+                              min(k, len(space.tunables)))
+            for i in idxs:
+                t = space.tunables[i]
+                out[i] = t.values[rng.randrange(t.cardinality)]
+            cur = space.nearest_valid(tuple(out), rng)
+        f_cur = _fitness(runner(cur))
+
+
+# --------------------------------------------------------------------- MLS
+def _mls(hp, space, runner, rng):
+    adjacent = bool(hp["adjacent_only"])
+    while True:
+        cur = space.random_config(rng)
+        f_cur = _fitness(runner(cur))
+        while True:
+            nbrs = space.neighbors(cur, strictly_adjacent=adjacent)
+            best_n, best_f = None, f_cur
+            for n in nbrs:
+                f = _fitness(runner(n))
+                if f < best_f:
+                    best_n, best_f = n, f
+            if best_n is None:
+                break
+            cur, f_cur = best_n, best_f
+
+
+LEGACY_OPTIMIZE = {
+    "random_search": _rs,
+    "genetic_algorithm": _ga,
+    "pso": _pso,
+    "differential_evolution": _de,
+    "simulated_annealing": _sa,
+    "dual_annealing": _dual_annealing,
+    "basin_hopping": _basin_hopping,
+    "greedy_ils": _greedy_ils,
+    "mls": _mls,
+}
+
+
+def legacy_run(name: str, hyperparams: dict, space, runner,
+               rng: random.Random):
+    """The pre-refactor ``Strategy.run``: imperative loop until
+    BudgetExhausted, then return the best observation."""
+    from repro.core.strategies import STRATEGIES
+    hp = {**STRATEGIES[name].DEFAULTS, **hyperparams}
+    try:
+        LEGACY_OPTIMIZE[name](hp, space, runner, rng)
+    except BudgetExhausted:
+        pass
+    return runner.best

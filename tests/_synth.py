@@ -1,0 +1,43 @@
+"""Deterministic synthetic caches for parity testing.
+
+Unlike the ``default_rng``-built caches in test_engine_parity.py (which are
+compared engine-vs-engine inside one process), these values are closed-form
+functions of the config index — no RNG anywhere — so traces recorded into
+committed fixtures reproduce bit-for-bit on any numpy version, platform, or
+interpreter.
+"""
+import math
+
+from repro.core.cache import CachedResult, CacheFile
+from repro.core.searchspace import SearchSpace
+from repro.core.tunable import tunables_from_dict
+
+
+def parity_cache(n_a: int = 24, n_b: int = 4, name: str = "parity",
+                 fail_every: int = 11) -> CacheFile:
+    """A structured space with inf-valued failures and heterogeneous
+    charges, all derived arithmetically from the enumeration index."""
+    space = SearchSpace(tunables_from_dict({"a": tuple(range(n_a)),
+                                            "b": tuple(range(n_b)),
+                                            "m": ("p", "q")}),
+                        name=name)
+    results = {}
+    for i, cfg in enumerate(space.valid_configs):
+        key = space.config_id(cfg)
+        a, b, m = cfg
+        if fail_every and i % fail_every == 3:
+            results[key] = CachedResult("error", math.inf, (),
+                                        0.1 + ((i * 7) % 13) / 13.0, 0.01)
+        else:
+            # smooth bowl + deterministic "noise" so local structure exists
+            v = 1e-3 * (1.0 + (a - 17) ** 2 + 3.0 * (b - 1) ** 2
+                        + (2.5 if m == "q" else 0.0)
+                        + ((i * 31) % 97) / 97.0)
+            reps = (v * 0.98, v, v * 1.02)
+            results[key] = CachedResult("ok", v, reps,
+                                        0.05 + ((i * 5) % 7) / 70.0, 0.01)
+    return CacheFile(name, "synth", space, results)
+
+
+def total_charge(cache: CacheFile) -> float:
+    return sum(r.charge_s for r in cache.results.values())

@@ -1,0 +1,129 @@
+"""The ``repro.api`` facade: one Tuner, four verbs, one TuningRun type."""
+import os
+import random
+
+import pytest
+from _synth import parity_cache
+
+from repro.api import Tuner, TuningRun
+from repro.core.budget import Budget
+from repro.core.hypertuner import exhaustive_hypertune
+from repro.core.methodology import make_scorer
+from repro.core.runner import SimulationRunner
+from repro.core.strategies import get_strategy
+
+
+@pytest.fixture(scope="module")
+def cache_path(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("api") / "parity.json.gz")
+    parity_cache().save(path)
+    return path
+
+
+def _tuner(cache_path, **kw) -> Tuner:
+    kw.setdefault("repeats", 4)
+    return Tuner(caches=[cache_path], **kw)
+
+
+def test_simulate_matches_core_methodology(cache_path):
+    with _tuner(cache_path) as tuner:
+        run = tuner.simulate("genetic_algorithm")
+    assert isinstance(run, TuningRun)
+    assert run.mode == "simulate" and run.strategy == "genetic_algorithm"
+    from repro.core.methodology import evaluate_strategy
+    ref = evaluate_strategy(lambda: get_strategy("genetic_algorithm"),
+                            [make_scorer(parity_cache())], repeats=4, seed=0)
+    assert run.score == ref.score
+    assert run.report.per_space_score == ref.per_space_score
+    assert run.simulated_seconds == ref.simulated_seconds
+
+
+def test_simulate_accepts_cachefile_objects_and_hyperparams(cache_path):
+    with Tuner(caches=[parity_cache()], repeats=3) as tuner:
+        run = tuner.simulate("pso", {"popsize": 10, "maxiter": 50})
+    assert run.score is not None
+    assert run.n_evaluated == 1
+
+
+def test_hypertune_matches_core_campaign(cache_path):
+    with _tuner(cache_path, repeats=3) as tuner:
+        run = tuner.hypertune("mls")  # 2-point grid: fast
+    ref = exhaustive_hypertune("mls", [make_scorer(parity_cache())],
+                               repeats=3, seed=0)
+    assert run.mode == "hypertune"
+    assert run.score == ref.best.score
+    assert run.best_hyperparams == ref.best.hyperparams
+    assert run.n_evaluated == len(ref.results) == 2
+    assert run.hypertuning.ranked()[0].score == run.score
+
+
+def test_hypertune_journal_resume(cache_path, tmp_path):
+    journal = str(tmp_path / "mls.jsonl")
+    with _tuner(cache_path, repeats=3) as tuner:
+        first = tuner.hypertune("mls", journal=journal)
+        resumed = tuner.hypertune("mls", journal=journal)
+    assert os.path.exists(journal)
+    assert resumed.score == first.score
+    assert resumed.best_hyperparams == first.best_hyperparams
+
+
+def test_meta_returns_simulated_seconds(cache_path):
+    with _tuner(cache_path, repeats=3) as tuner:
+        run = tuner.meta("genetic_algorithm", "simulated_annealing",
+                         extended=False, max_hp_evals=5)
+    assert run.mode == "meta"
+    assert run.meta.simulated_seconds == run.simulated_seconds > 0.0
+    assert run.speedup is not None and run.speedup > 1.0
+    assert run.best_hyperparams
+    assert run.n_evaluated == len(run.meta.evaluated) <= 5
+
+
+def test_meta_mid_run_checkpoints_in_journal(cache_path, tmp_path):
+    journal = str(tmp_path / "meta.jsonl")
+    with _tuner(cache_path, repeats=3) as tuner:
+        run = tuner.meta("genetic_algorithm", "simulated_annealing",
+                         extended=False, max_hp_evals=4, journal=journal)
+    from repro.core.parallel import CampaignJournal
+    _, records = CampaignJournal(journal).read()
+    snaps = [r for r in records if r.get("type") == "checkpoint"]
+    evals = [r for r in records if r.get("type") != "checkpoint"]
+    assert snaps, "meta campaigns checkpoint SearchState mid-run"
+    assert len(evals) == run.n_evaluated
+    # resume restores the snapshot and recomputes nothing
+    with _tuner(cache_path, repeats=3) as tuner:
+        resumed = tuner.meta("genetic_algorithm", "simulated_annealing",
+                             extended=False, max_hp_evals=4,
+                             journal=journal)
+    assert resumed.score == run.score
+    assert resumed.best_hyperparams == run.best_hyperparams
+
+
+def test_record_costmodel_produces_replayable_cache(tmp_path):
+    out = str(tmp_path / "ssd.json.gz")
+    with Tuner(workers=2, backend="thread") as tuner:
+        run = tuner.record("ssd", runner="costmodel", device="tpu_v5e",
+                           max_evals=6, out=out)
+    assert run.mode == "record"
+    assert os.path.exists(out) and run.cache_path == out
+    assert run.best_config and run.best_value > 0
+    assert run.n_evaluated == len(run.cache.results)
+    # the recorded cache replays through the simulation engine
+    runner = SimulationRunner(run.cache, Budget(max_evals=4))
+    best = get_strategy("random_search").run(run.cache.space, runner,
+                                             random.Random(0))
+    assert best is not None
+
+
+def test_unknown_kernel_fails_fast():
+    with Tuner() as tuner:
+        with pytest.raises(KeyError):
+            tuner.record("nope", runner="costmodel")
+
+
+def test_empty_hub_selection_raises():
+    with pytest.raises(ValueError):
+        Tuner(kernels=["no_such_kernel"]).scorers
+
+
+def test_speedup_none_without_wall():
+    assert TuningRun(mode="simulate", strategy="x").speedup is None
