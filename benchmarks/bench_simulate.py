@@ -24,6 +24,24 @@ on. Components:
                    ~1.2-1.9x by bit-parity itself — the strategies' own
                    RNG stepping (breeding, shuffles) must replay exactly
                    (see docs/performance.md "Why not more").
+  space_compile    compiled-space construction (``core.space``): blocked
+                   vectorized enumeration + both CSR neighbor tables vs
+                   the frozen scalar reference
+                   (``core.space.reference.ReferenceSearchSpace``):
+                   recursive-DFS enumeration + per-config lazy neighbor
+                   lists over the whole space. This is the one-time cost a
+                   campaign pays per (space, process); the scalar side
+                   used to pay it lazily, spread over every first visit.
+  local_search     neighborhood-heavy local search (greedy ILS + MLS over
+                   Hamming neighborhoods) as 25-repeat fused grids: the
+                   recorded per-round ask streams — whole neighborhoods as
+                   compiled-space row slices — replayed fresh through
+                   ``run_fused`` row commits vs the scalar per-evaluation
+                   reference loop. Single-move searches (SA) are recorded
+                   as informational ``sa_*`` extras: their asks are one
+                   config each, so both stacks are bounded by Python call
+                   overhead (~1.2x) rather than per-eval resolution work
+                   (see docs/performance.md).
 
 Every component reports vectorized and scalar wall clock plus their ratio
 (``speedup``). The ratio is what CI regresses against: it is measured on
@@ -36,6 +54,7 @@ Usage: PYTHONPATH=src python -m benchmarks.run bench --json BENCH_simulate.json
 """
 from __future__ import annotations
 
+import gc
 import hashlib
 import json
 import random
@@ -50,13 +69,14 @@ from repro.core.methodology import (_repeat_rng, evaluate_strategy,
                                     make_scorer)
 from repro.core.runner import SimulationRunner, run_fused
 from repro.core.searchspace import SearchSpace
+from repro.core.space.reference import ReferenceSearchSpace
 from repro.core.strategies import get_strategy
 from repro.core.tunable import tunables_from_dict
 
 from .common import FAST
 
 BENCH_FORMAT = "repro-bench-simulate"
-BENCH_VERSION = 2  # v2: drive_many component (ask/tell fused driver)
+BENCH_VERSION = 3  # v3: space_compile + local_search (compiled spaces)
 
 # the campaign component's hyperparameter set: a slice of the Table III
 # grids, small enough for CI, population-shaped so the batch step is on
@@ -100,13 +120,50 @@ def _small_cache(n: int = SMALL_SPACE_N, seed: int = 7) -> CacheFile:
     return CacheFile(f"bench{n}", "synthetic", space, results)
 
 
+class _gc_paused:
+    """Timed-region discipline: the replay components allocate tens of
+    thousands of observations per pass, and cyclic-GC pauses land on random
+    components otherwise (measured: up to 2.5x swings on the allocation-
+    heavy vectorized sides). Pausing the collector for both engines keeps
+    the gated ratios about the code, not the collector."""
+
+    def __enter__(self):
+        self._was_enabled = gc.isenabled()
+        gc.collect()
+        gc.disable()
+        return self
+
+    def __exit__(self, *exc):
+        if self._was_enabled:
+            gc.enable()
+
+
 def _best_of(fn, repeat: int = 5) -> float:
     best = float("inf")
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
+    with _gc_paused():
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _best_pair(fn_vec, fn_sca, repeat: int = 5) -> tuple:
+    """Best-of walls for the two engines measured *interleaved* (vec, sca,
+    vec, sca, ...) instead of in two sequential windows: shared-runner
+    slowdowns come in multi-second patches, and sampling both engines
+    across the same patches keeps their ratio — what CI gates on — honest
+    even when absolute walls wander."""
+    best_v = best_s = float("inf")
+    with _gc_paused():
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fn_vec()
+            best_v = min(best_v, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            fn_sca()
+            best_s = min(best_s, time.perf_counter() - t0)
+    return best_v, best_s
 
 
 def _component(wall_vec: float, wall_scalar: float, **extra) -> dict:
@@ -125,8 +182,7 @@ def bench_replay(cache: CacheFile) -> tuple[dict, dict]:
             r.run_batch(configs)
         return go
 
-    w_vec = _best_of(fresh(True))
-    w_sca = _best_of(fresh(False))
+    w_vec, w_sca = _best_pair(fresh(True), fresh(False))
     fresh_c = _component(w_vec, w_sca,
                          evals_per_sec=len(configs) / w_vec,
                          evals_per_sec_scalar=len(configs) / w_sca,
@@ -141,8 +197,7 @@ def bench_replay(cache: CacheFile) -> tuple[dict, dict]:
             r.run_batch(configs)
         return go
 
-    w_vec = _best_of(revisit(True))
-    w_sca = _best_of(revisit(False))
+    w_vec, w_sca = _best_pair(revisit(True), revisit(False))
     revisit_c = _component(w_vec, w_sca,
                            evals_per_sec=len(configs) / w_vec,
                            evals_per_sec_scalar=len(configs) / w_sca,
@@ -167,45 +222,48 @@ def bench_score_trace(cache: CacheFile) -> dict:
                 sc.score_trace(trace, times, baseline)
         return run
 
-    w_vec = _best_of(go(sc_vec))
-    w_sca = _best_of(go(sc_sca))
+    w_vec, w_sca = _best_pair(go(sc_vec), go(sc_sca))
     return _component(w_vec, w_sca, calls_per_sec=calls / w_vec,
                       calls_per_sec_scalar=calls / w_sca,
                       trace_len=len(trace))
 
 
 def bench_baseline_small() -> dict:
-    w_vec = _best_of(lambda: make_scorer(_small_cache(), engine="vectorized"))
-    w_sca = _best_of(lambda: make_scorer(_small_cache(), engine="scalar"))
+    w_vec, w_sca = _best_pair(
+        lambda: make_scorer(_small_cache(), engine="vectorized"),
+        lambda: make_scorer(_small_cache(), engine="scalar"))
     return _component(w_vec, w_sca, n_configs=SMALL_SPACE_N)
 
 
 def bench_campaign() -> dict:
     walls, evals, scores = {}, {}, {}
-    for engine in ("vectorized", "scalar"):
-        # fresh caches per engine: spaces memoize ids/validity/neighbors as
-        # they are exercised, so sharing objects would hand the
-        # second-measured engine a warm cache and skew the ratio
-        scorers = [make_scorer(c, engine=engine) for c in _hub_caches()]
-        scorers.append(make_scorer(_small_cache(), engine=engine))
-        # best of two passes: the second runs against warm space caches —
-        # what a long campaign actually sees — and is far less noisy,
-        # which matters because CI gates on this ratio
-        best_wall = float("inf")
+    # fresh caches per engine: spaces memoize compiled tables / ids as
+    # they are exercised, so sharing objects would hand the second
+    # engine a warm cache and skew the ratio
+    scorers = {engine: [make_scorer(c, engine=engine)
+                        for c in _hub_caches() + [_small_cache()]]
+               for engine in ("vectorized", "scalar")}
+    # best of two passes per engine, engines interleaved (see _best_pair):
+    # the second pass runs against warm space caches — what a long
+    # campaign actually sees — and interleaving keeps host-noise patches
+    # out of the gated ratio
+    with _gc_paused():
         for _pass in range(2):
-            t0 = time.perf_counter()
-            fresh = 0
-            engine_scores = {}
-            for strat, hp in CAMPAIGN_SET:
-                rep = evaluate_strategy(lambda: get_strategy(strat, **hp),
-                                        scorers, repeats=REPEATS, seed=0)
-                fresh += rep.fresh_evals
-                hp_id = ",".join(f"{k}={hp[k]}" for k in sorted(hp))
-                engine_scores[f"{strat}({hp_id})"] = rep.score
-            best_wall = min(best_wall, time.perf_counter() - t0)
-        walls[engine] = best_wall
-        evals[engine] = fresh
-        scores[engine] = engine_scores
+            for engine in ("vectorized", "scalar"):
+                t0 = time.perf_counter()
+                fresh = 0
+                engine_scores = {}
+                for strat, hp in CAMPAIGN_SET:
+                    rep = evaluate_strategy(
+                        lambda: get_strategy(strat, **hp),
+                        scorers[engine], repeats=REPEATS, seed=0)
+                    fresh += rep.fresh_evals
+                    hp_id = ",".join(f"{k}={hp[k]}" for k in sorted(hp))
+                    engine_scores[f"{strat}({hp_id})"] = rep.score
+                wall = time.perf_counter() - t0
+                walls[engine] = min(walls.get(engine, float("inf")), wall)
+                evals[engine] = fresh
+                scores[engine] = engine_scores
     if scores["vectorized"] != scores["scalar"]:
         raise AssertionError(
             "engine parity violation: vectorized and scalar campaigns "
@@ -225,17 +283,24 @@ DRIVE_MANY_REPEATS = 25  # the methodology's repeat count (paper Sec. III-B)
 DRIVE_MANY_STRATEGY = "genetic_algorithm"
 
 
-def _harvest_grid_stream(cache: CacheFile, budget_s: float,
-                         seed: int) -> tuple:
-    """Drive one real ``DRIVE_MANY_REPEATS``-run GA grid (the
+def _harvest_grid_stream(cache: CacheFile, budget_s: float, seed: int,
+                         strategy: str = None,
+                         hyperparams: dict = None) -> tuple:
+    """Drive one real ``DRIVE_MANY_REPEATS``-run strategy grid (the
     ``drive_many`` path, same per-cell RNG seeding as ``run_repeat``) and
-    record its per-round ask stream plus the reference traces."""
+    record its per-round ask stream plus the reference traces. Asks are
+    kept in their native form — ``core.space.RowBatch`` since the
+    index-native refactor — so replays exercise the row path the real
+    driver uses, while the scalar reference simply iterates them into
+    value tuples."""
     scorer_name = f"{cache.kernel}@{cache.device}"
 
     class _Named:  # _repeat_rng seeds from the scorer's name
         name = scorer_name
 
-    drivers = [SearchDriver(get_strategy(DRIVE_MANY_STRATEGY), cache.space,
+    drivers = [SearchDriver(get_strategy(strategy or DRIVE_MANY_STRATEGY,
+                                         **(hyperparams or {})),
+                            cache.space,
                             SimulationRunner(cache,
                                              Budget(max_seconds=budget_s)),
                             _repeat_rng(_Named, r, seed))
@@ -250,7 +315,7 @@ def _harvest_grid_stream(cache: CacheFile, budget_s: float,
             if not configs:
                 d.state.finished = True
                 continue
-            entries.append((i, list(configs)))
+            entries.append((i, configs))
         if not entries:
             break
         results = run_fused([(drivers[i].runner, cfgs)
@@ -264,6 +329,8 @@ def _harvest_grid_stream(cache: CacheFile, budget_s: float,
                 survivors.append(i)
         rounds.append(entries)
         active = survivors
+    for d in drivers:
+        d.state.close()
     return rounds, [list(d.runner.trace) for d in drivers]
 
 
@@ -277,11 +344,11 @@ def bench_drive_many(caches: "list[CacheFile]") -> dict:
     between the two outside the timed region. The grids' end-to-end walls
     (strategy stepping included) are recorded as ``grid_*`` extras.
     """
-    # two grid seeds per space: double the measured stream, halving the
-    # relative timing noise CI gates against
+    # three grid seeds per space: triple the measured stream, shrinking
+    # the relative timing noise CI gates against
     harvests = [(c, b, _harvest_grid_stream(c, b, seed))
                 for c, b in ((c, make_scorer(c).budget_s) for c in caches)
-                for seed in (0, 1)]
+                for seed in (0, 1, 2)]
     n_evals = sum(len(cfgs) for _, _, (rounds, _) in harvests
                   for entries in rounds for _, cfgs in entries)
 
@@ -312,8 +379,8 @@ def bench_drive_many(caches: "list[CacheFile]") -> dict:
             for runner, ref in zip(runners, refs):
                 assert runner.trace == ref, \
                     "drive_many parity violation: fused replay diverged"
-    w_vec = _best_of(lambda: replay(True), repeat=9)
-    w_sca = _best_of(lambda: replay(False), repeat=9)
+    w_vec, w_sca = _best_pair(lambda: replay(True), lambda: replay(False),
+                              repeat=9)
 
     # -- end-to-end grid walls (strategy stepping included), informational
     def grid(engine: str, drive: str) -> float:
@@ -337,6 +404,120 @@ def bench_drive_many(caches: "list[CacheFile]") -> dict:
                       grid_speedup=grid_sca / max(grid_vec, 1e-12))
 
 
+def bench_space_compile(caches: "list[CacheFile]") -> dict:
+    """Compiled-space construction vs the frozen scalar reference.
+
+    vec:    ``SearchSpace.compiled`` (blocked vectorized enumeration with
+            the membership fast path) plus both CSR neighbor tables;
+    scalar: ``ReferenceSearchSpace`` recursive-DFS enumeration plus lazy
+            neighbor lists for every valid config in both semantics — the
+            work the old implementation spread over every first visit of a
+            campaign, here paid in one measurable lump.
+    Fresh space objects per timed pass (this is a cold-start component).
+    """
+    specs = [(c.space.tunables, c.space.constraints, c.space.name)
+             for c in caches]
+    n_valid = 0
+
+    def vec():
+        nonlocal n_valid
+        n_valid = 0
+        for tun, cons, name in specs:
+            cs = SearchSpace(tun, cons, name).compiled
+            cs.csr(strictly_adjacent=False)
+            cs.csr(strictly_adjacent=True)
+            n_valid += cs.n_valid
+
+    def sca():
+        for tun, cons, name in specs:
+            space = ReferenceSearchSpace(tun, cons, name)
+            for cfg in space.valid_configs:
+                space.neighbors(cfg)
+                space.neighbors(cfg, strictly_adjacent=True)
+
+    w_vec, w_sca = _best_pair(vec, sca, repeat=3)
+    return _component(w_vec, w_sca, n_valid=n_valid, n_spaces=len(specs),
+                      configs_per_sec=n_valid / w_vec,
+                      configs_per_sec_scalar=n_valid / w_sca)
+
+
+# neighborhood-heavy local searches: whole Hamming neighborhoods per ask
+LOCAL_SEARCH_SET = (("greedy_ils", {}), ("mls", {"adjacent_only": False}))
+LOCAL_SEARCH_SINGLE = ("simulated_annealing", {})  # informational extras
+
+
+def bench_local_search(caches: "list[CacheFile]") -> dict:
+    """Fresh-replay of neighborhood-heavy local-search grids.
+
+    Harvests the per-round ask streams of real 25-repeat greedy-ILS and
+    Hamming-MLS grids (whole neighborhoods as compiled-space row slices),
+    then times those exact streams through (a) ``run_fused`` row commits
+    on columnar runners and (b) the scalar per-evaluation reference loop,
+    asserting trace parity outside the timed region — the local-search
+    analogue of ``bench_drive_many``. Simulated annealing's single-move
+    stream is measured the same way and reported as ``sa_*`` extras: one
+    config per ask leaves both stacks bound by Python call overhead, so
+    its ratio is informational, not gated.
+    """
+    def harvests_for(specs) -> list:
+        # three grid seeds per (space, strategy): triple the measured
+        # stream, shrinking the relative timing noise CI gates against
+        return [(c, b, _harvest_grid_stream(c, b, seed, strategy=s,
+                                            hyperparams=hp))
+                for c, b in ((c, make_scorer(c).budget_s) for c in caches)
+                for s, hp in specs
+                for seed in (0, 1, 2)]
+
+    def replay(harvests, columnar: bool) -> list:
+        all_runners = []
+        for cache, budget_s, (rounds, _) in harvests:
+            runners = [SimulationRunner(cache,
+                                        Budget(max_seconds=budget_s),
+                                        columnar=columnar)
+                       for _ in range(DRIVE_MANY_REPEATS)]
+            if columnar:
+                for entries in rounds:
+                    run_fused([(runners[i], cfgs) for i, cfgs in entries])
+            else:
+                for entries in rounds:
+                    for i, cfgs in entries:
+                        run = runners[i].run
+                        try:
+                            for c in cfgs:
+                                run(c)
+                        except BudgetExhausted:
+                            pass
+            all_runners.append(runners)
+        return all_runners
+
+    def measure(harvests) -> tuple:
+        for columnar in (True, False):  # parity outside the timed region
+            for runners, (_, _, (_, refs)) in zip(
+                    replay(harvests, columnar), harvests):
+                for runner, ref in zip(runners, refs):
+                    assert runner.trace == ref, \
+                        "local_search parity violation: replay diverged"
+        w_vec, w_sca = _best_pair(lambda: replay(harvests, True),
+                                  lambda: replay(harvests, False),
+                                  repeat=9)
+        n = sum(len(cfgs) for _, _, (rounds, _) in harvests
+                for entries in rounds for _, cfgs in entries)
+        return w_vec, w_sca, n
+
+    main_harvests = harvests_for(LOCAL_SEARCH_SET)
+    w_vec, w_sca, n_evals = measure(main_harvests)
+    sa_vec, sa_sca, sa_evals = measure(harvests_for([LOCAL_SEARCH_SINGLE]))
+    return _component(w_vec, w_sca,
+                      evals_per_sec=n_evals / w_vec,
+                      evals_per_sec_scalar=n_evals / w_sca,
+                      n_evals=n_evals,
+                      strategies=[s for s, _ in LOCAL_SEARCH_SET],
+                      n_runs=DRIVE_MANY_REPEATS * len(main_harvests),
+                      sa_wall_s=sa_vec, sa_wall_s_scalar=sa_sca,
+                      sa_speedup=sa_sca / max(sa_vec, 1e-12),
+                      sa_n_evals=sa_evals)
+
+
 def run_bench() -> dict:
     hub = _hub_caches()
     big = hub[0]  # gemm@tpu_v5e: the largest hub space
@@ -353,6 +534,9 @@ def run_bench() -> dict:
                              for s, hp in CAMPAIGN_SET],
             "drive_many": {"repeats": DRIVE_MANY_REPEATS,
                            "strategy": DRIVE_MANY_STRATEGY},
+            "local_search": {"repeats": DRIVE_MANY_REPEATS,
+                             "strategies": [f"{s}:{sorted(hp.items())}"
+                                            for s, hp in LOCAL_SEARCH_SET]},
         },
         "components": {
             "replay_fresh": fresh_c,
@@ -361,6 +545,8 @@ def run_bench() -> dict:
             "baseline_small": bench_baseline_small(),
             "campaign": bench_campaign(),
             "drive_many": bench_drive_many(hub),
+            "space_compile": bench_space_compile(hub),
+            "local_search": bench_local_search(hub),
         },
     }
     comp = report["components"]

@@ -40,7 +40,31 @@ from .core.methodology import (DEFAULT_CUTOFF, AggregateReport, SpaceScorer,
                                make_scorer)
 from .core.parallel import CampaignExecutor, CampaignJournal
 
-__all__ = ["Tuner", "TuningRun"]
+__all__ = ["Tuner", "TuningRun", "describe_space", "hyperparam_space_stats"]
+
+
+def describe_space(space) -> dict:
+    """Compile one ``SearchSpace`` (if not already compiled) and return its
+    stats: cartesian vs valid size, valid fraction, neighbor-degree
+    distribution per semantics, compile time. The data behind
+    ``python -m repro spaces``."""
+    return space.compiled.stats()
+
+
+def hyperparam_space_stats(extended: bool = False) -> list[dict]:
+    """``describe_space`` over every registered strategy's hyperparameter
+    grid (Table III, or Table IV with ``extended``) — they compile through
+    the same ``core.space`` path as kernel spaces."""
+    from .core.hypertuner import hyperparam_searchspace
+    from .core.strategies import STRATEGIES
+    out = []
+    for name, cls in sorted(STRATEGIES.items()):
+        grid = cls.EXTENDED_SPACE if extended else cls.HYPERPARAM_SPACE
+        if not grid:
+            continue
+        out.append(describe_space(hyperparam_searchspace(name,
+                                                         extended=extended)))
+    return out
 
 
 @dataclasses.dataclass
@@ -145,6 +169,12 @@ class Tuner:
         if self._executor is None:
             self._executor = CampaignExecutor(self.workers, self.backend)
         return self._executor
+
+    def space_stats(self) -> list[dict]:
+        """``describe_space`` for every search space of this tuner's
+        cache/hub selection (compiles the spaces; does *not* build scorers,
+        so no 1000-run baselines are paid for a stats listing)."""
+        return [describe_space(c.space) for c in self._resolve_caches()]
 
     def close(self) -> None:
         if self._executor is not None:

@@ -12,6 +12,10 @@ One entry point for the paper's workflow, replacing the ad-hoc scripts in
              Table IV / Eq. 4), journaled for resume
   report     inspect a campaign journal: ranking, optimal-vs-average
              improvement (the 94.8 % metric), wall-clock parallelism
+  spaces     per-space statistics for the selected hub/cache spaces and
+             the strategies' hyperparameter grids: cartesian vs valid
+             size, valid fraction, neighbor-degree distribution, compile
+             time (the ``core.space`` compiled representation)
   record     strategy-sample a registered Pallas kernel (live interpret
              mode or cost model) across parallel workers and emit a
              replayable T4 cache — producing the FAIR data the simulation
@@ -226,6 +230,33 @@ def cmd_report(args) -> int:
     return 0
 
 
+def cmd_spaces(args) -> int:
+    """Per-space stats (thin over ``repro.api.describe_space``)."""
+    from .api import hyperparam_space_stats
+
+    def row(st: dict) -> str:
+        adj, ham = st["degrees"]["strictly_adjacent"], st["degrees"]["hamming"]
+        return (f"  {st['name']:32s} {st['cartesian_size']:>9d} "
+                f"{st['n_valid']:>8d} {st['valid_fraction']:>6.1%} "
+                f"{adj['median']:>5.1f}/{adj['max']:<4d} "
+                f"{ham['median']:>6.1f}/{ham['max']:<5d} "
+                f"{st['compile_seconds']*1e3:>8.1f}")
+
+    header = (f"  {'space':32s} {'cartesian':>9s} {'valid':>8s} {'frac':>6s} "
+              f"{'adj med/max':>10s} {'ham med/max':>12s} {'compile ms':>9s}")
+    tuner = tuner_from_args(args)
+    print("search spaces (hub/cache selection):")
+    print(header)
+    for st in tuner.space_stats():
+        print(row(st))
+    print(f"hyperparameter grids "
+          f"({'Table IV extended' if args.extended else 'Table III'}):")
+    print(header)
+    for st in hyperparam_space_stats(extended=args.extended):
+        print(row(st))
+    return 0
+
+
 def _run_recording(args, bruteforce: bool) -> int:
     """``record``/``bruteforce``: fan one shard per worker out through the
     facade, which merges them into the output cache."""
@@ -350,6 +381,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="path to a campaign JSONL journal")
     pr.add_argument("--top", type=int, default=10)
     pr.set_defaults(fn=cmd_report)
+
+    psp = sub.add_parser("spaces", help="per-space stats: sizes, valid "
+                         "fraction, neighbor degrees, compile time")
+    psp.add_argument("--extended", action="store_true",
+                     help="show the Table IV extended hyperparameter grids "
+                          "instead of Table III")
+    _add_space_args(psp)
+    _add_exec_args(psp)
+    psp.set_defaults(fn=cmd_spaces)
 
     def _add_record_args(pp, bruteforce: bool) -> None:
         pp.add_argument("--kernel", required=True,

@@ -150,7 +150,8 @@ class CacheColumns:
     """
 
     __slots__ = ("keys", "index", "records", "time_s", "charge_s",
-                 "time_list", "charge_list", "_mean_charge", "_detail")
+                 "time_list", "charge_list", "_mean_charge", "_detail",
+                 "_space_rows")
 
     def __init__(self, results: Mapping[str, CachedResult]):
         self.keys = tuple(results.keys())
@@ -169,6 +170,7 @@ class CacheColumns:
         # replay/scoring hot paths never touch them, and every insert
         # invalidation triggers a rebuild of this object
         self._detail: tuple | None = None
+        self._space_rows: tuple | None = None  # (compiled, row map) memo
 
     def __len__(self) -> int:
         return len(self.keys)
@@ -218,6 +220,34 @@ class CacheColumns:
         idx = self.index
         return np.fromiter((idx.get(k, -1) for k in keys),
                            dtype=np.int64, count=len(keys))
+
+    def rows_for_space(self, compiled) -> np.ndarray:
+        """Space-row -> cache-row map for a ``core.space.CompiledSpace``:
+        the bridge that lets the index-native hot path gather results by
+        integer row with no per-evaluation string-id hash probe. Built once
+        per (columns, compiled space) pair — config-id strings survive only
+        in this one-time boundary translation (and the cache file itself).
+        Space rows absent from the recorded set map to -1 (imputed-miss
+        semantics, like ``rows_for``)."""
+        cached = self._space_rows
+        if cached is not None and cached[0] is compiled:
+            return cached[1]
+        rows = self.rows_for(compiled.ids)
+        # plain-list mirror rides along: small-batch commits index it with
+        # Python ints (see SimulationRunner._commit_rows_loop), and building
+        # it once here keeps short-lived runners (a 25-repeat grid's worth)
+        # from each paying an O(n_valid) tolist
+        rows.flags.writeable = False
+        self._space_rows = (compiled, rows, rows.tolist())
+        return rows
+
+    def rows_for_space_list(self, compiled) -> list:
+        """The ``rows_for_space`` map as a plain list (same cache entry)."""
+        cached = self._space_rows
+        if cached is None or cached[0] is not compiled:
+            self.rows_for_space(compiled)
+            cached = self._space_rows
+        return cached[2]
 
 
 class CacheFile:

@@ -54,6 +54,11 @@ MAX_CHECKPOINT_BYTES = 1 << 20
 
 
 def hyperparam_searchspace(strategy_name: str, extended: bool = False) -> SearchSpace:
+    """The strategy's hyperparameter grid as an ordinary ``SearchSpace`` —
+    which means it compiles through the same ``core.space`` path as kernel
+    spaces: meta-strategies walk hyperparameter neighborhoods as CSR row
+    slices and sample/repair through the same move tables (constraint-free
+    grids compile to an all-valid bitmap in one vectorized pass)."""
     cls = STRATEGIES[strategy_name]
     grid = cls.EXTENDED_SPACE if extended else cls.HYPERPARAM_SPACE
     if not grid:
@@ -325,13 +330,18 @@ def results_to_cache(result: HyperTuningResult,
     the same methodology (paper Fig. 6). Every 'config' charges the mean
     campaign cost (each hyperparameter evaluation costs about the same)."""
     space = hyperparam_searchspace(result.strategy)
+    cs = space.compiled
     n = max(1, len(result.results))
     charge = (mean_campaign_seconds
               if mean_campaign_seconds is not None
               else result.simulated_seconds / n)
     cached = {}
     for hp_id, r in result.results.items():
-        key = space.config_id(space.from_dict(r.hyperparams))
+        # row-native id: one flat-index lookup into the precomputed id
+        # table instead of a per-config string join
+        row = cs.row_of_config(space.from_dict(r.hyperparams))
+        key = (cs.ids[row] if row >= 0
+               else space.config_id(space.from_dict(r.hyperparams)))
         # objective = -score (dimensionless); the *charge* (time axis) is the
         # campaign cost, carried entirely by compile_s so that
         # charge_s == campaign seconds exactly.

@@ -34,6 +34,15 @@ The base implementation *is* that loop (the scalar reference path);
 cache's columnar view (``cache.CacheColumns``) in one vectorized gather, so
 population strategies can evaluate an entire generation per call.
 
+Index-native batches: strategies ask in ``core.space.RowBatch`` form —
+integer rows of the compiled space instead of value tuples. A columnar
+``SimulationRunner`` resolves those by pure row indexing (``_run_rows``:
+row -> cache column via ``CacheColumns.rows_for_space``, O(1) gathers, no
+tuple hashing or string-id probes); every other runner just iterates the
+batch and receives ordinary value tuples. Config-id strings and value
+tuples materialize only on *fresh* commits — the memo/trace/recording
+boundary.
+
 Runners are single-run state (memo, budget, trace) and are NOT shared across
 threads: parallel campaigns (``core.parallel``) construct one runner per
 (space, repeat) task — see ``methodology.run_repeat``.
@@ -51,6 +60,7 @@ from .cache import CacheFile, CachedResult
 from .costmodel import KernelWorkload, estimate
 from .devices import DeviceModel
 from .searchspace import SearchSpace
+from .space import RowBatch
 from .tunable import Config
 
 INVALID = float("inf")
@@ -95,6 +105,10 @@ class Runner:
         self.trace: list[tuple[float, float, Config]] = []
         self.fresh_evals = 0
         self.wall_start = time.perf_counter()
+        # row-native mirror of the memo (SimulationRunner fast path);
+        # declared here so load_state_dict can invalidate it uniformly
+        self._rows_st: tuple | None = None
+        self._rows_memo_len = -1
 
     # subclasses implement this
     def _evaluate(self, config: Config) -> "CachedResult | tuple[float, str, float]":
@@ -167,6 +181,9 @@ class Runner:
         self.fresh_evals = int(d["fresh_evals"])
         self.budget.spent_seconds = float(d["spent_seconds"])
         self.budget.spent_evals = int(d["spent_evals"])
+        # the restored memo is a different dict (possibly of the same
+        # length); a length check alone cannot catch that
+        self._rows_st = None
 
     @property
     def best(self) -> Observation | None:
@@ -224,28 +241,292 @@ class SimulationRunner(Runner):
         # charge comes from the precomputed column (same value, no re-sum)
         return result, result.time_s, result.status, cols.charge_list[row]
 
-    def _fused_state(self) -> tuple:
-        """Per-runner row-indexed mirrors of the memo for ``run_fused``:
-        ``(seen, obs_by_row)`` boolean/object arrays over the cache's rows.
-        Rebuilt whenever the memo changed outside a fused call (tracked by
-        length — the memo only ever grows) or the columnar view was
-        invalidated, so mixed ``run_batch``/fused usage stays coherent."""
+    # ------------------------------------------------------- row-native path
+    def _row_state(self) -> tuple:
+        """Row-indexed mirrors of the run state for the index-native path:
+        ``(seen, obs_by_row, col_of_row, col_list, cols)`` over the
+        *space's* valid rows (``space.compiled``). ``col_of_row`` bridges
+        space rows to cache-column rows (built once per columns view at the
+        string boundary; -1 = not recorded). Rebuilt whenever the memo
+        changed outside this path (tracked by length — the memo only grows
+        — plus an explicit reset in ``load_state_dict``) or the columnar
+        view was invalidated, so mixed scalar/keyed/row usage stays
+        coherent."""
         cols = self.cache.columns
-        st = getattr(self, "_fused", None)
-        if (st is None or st[2] is not cols
-                or len(self.memo) != getattr(self, "_fused_memo_len", -1)):
-            seen = np.zeros(len(cols), dtype=bool)
-            obs_by_row = np.empty(len(cols), dtype=object)
-            index_get = cols.index.get
-            for key, obs in self.memo.items():
-                row = index_get(key, -1)
-                if row >= 0:
-                    seen[row] = True
-                    obs_by_row[row] = obs
-            st = (seen, obs_by_row, cols)
-            self._fused = st
-            self._fused_memo_len = len(self.memo)
+        st = self._rows_st
+        if (st is None or st[4] is not cols
+                or len(self.memo) != self._rows_memo_len):
+            cs = self.space.compiled
+            seen = np.zeros(cs.n_valid, dtype=bool)
+            # a plain list, not an object ndarray: int indexing is ~2x
+            # cheaper and it is probed once per evaluation
+            obs_by_row: list = [None] * cs.n_valid
+            if self.memo:
+                # re-seed from the memo (resume, or keyed/scalar calls in
+                # between); keys outside the space's rows stay keyed-only
+                row_get = cs.id_to_row.get
+                for key, obs in self.memo.items():
+                    row = row_get(key, -1)
+                    if row >= 0:
+                        seen[row] = True
+                        obs_by_row[row] = obs
+            col_of_row = cols.rows_for_space(cs)
+            st = (seen, obs_by_row, col_of_row,
+                  cols.rows_for_space_list(cs), cols)
+            self._rows_st = st
+            self._rows_memo_len = len(self.memo)
         return st
+
+    # below this batch size the whole-array commit loses to plain bytecode:
+    # numpy's per-call overhead (argsort/cumsum/fancy gathers) outweighs
+    # the per-evaluation savings for population- and neighborhood-sized
+    # asks (measured crossover ~64, same as the old keyed path)
+    ROWS_VECTOR_MIN = 64
+    # chunk bounds for oversized row asks (see _run_rows)
+    ROWS_CHUNK_MIN = 512
+    ROWS_CHUNK_MAX = 4096
+
+    def _run_rows(self, rows) -> "list[Observation] | BudgetExhausted":
+        """Resolve a batch of space rows (any int sequence); returns the
+        observation list or the ``BudgetExhausted`` the equivalent ``run``
+        loop would have raised (committed state identical either way)."""
+        n = len(rows)
+        if n == 0:
+            return []
+        if n == 1:
+            # the single-move shape (simulated annealing, basin hopping,
+            # the thread bridge): skip every batch prologue
+            st = self._row_state()
+            r = rows[0]
+            obs = st[1][r]
+            return [obs] if obs is not None else self._commit_row(r, st)
+        if n <= 256 and self.memo:
+            # revisit fast path: local searches re-ask mostly-seen configs
+            # (single moves, whole neighborhoods); a fully memoized batch
+            # needs no budget/trace work at all — just the row gather.
+            # Fresh runners (empty memo) and huge asks (a whole-space
+            # permutation) skip the speculative gather — nothing can hit,
+            # or the vectorized commit's zero-fresh path handles it in
+            # whole-array ops.
+            obs_by_row = self._row_state()[1]
+            out = [obs_by_row[r] for r in
+                   (rows.tolist() if isinstance(rows, np.ndarray)
+                    else rows)]
+            if None not in out:
+                return out
+        if n >= self.ROWS_VECTOR_MIN:
+            if n <= self.ROWS_CHUNK_MIN:
+                return self._commit_rows_vectorized(rows)
+            # geometric chunking, like the keyed path: a strategy may hand
+            # over far more rows than the budget allows (random search
+            # batches the whole space permutation); whole-array commits on
+            # rows past the exhaustion point would be pure waste
+            arr = np.asarray(rows, dtype=np.int64)
+            out: list[Observation] = []
+            start, step = 0, self.ROWS_CHUNK_MIN
+            while start < n:
+                res = self._commit_rows_vectorized(arr[start:start + step])
+                if isinstance(res, BudgetExhausted):
+                    return res
+                out.extend(res)
+                start += step
+                step = min(step * 2, self.ROWS_CHUNK_MAX)
+            return out
+        return self._commit_rows_loop(rows)
+
+    def _commit_row(self, r, st) -> "list[Observation] | BudgetExhausted":
+        """Commit one fresh row — the scalar ``run`` commit sequence
+        (pre-check, charge, memo, trace) by row index."""
+        seen, obs_by_row, _col_arr, col_list, cols = st
+        budget = self.budget
+        if budget.exhausted:
+            try:
+                budget.check()  # same exception/message as the scalar path
+            except BudgetExhausted as e:
+                return e
+        col = col_list[r]
+        if col >= 0:
+            rec = cols.records[col]
+            status = rec.status
+            value = cols.time_list[col]
+            charge = cols.charge_list[col]
+        else:
+            charge = self.cache.mean_eval_charge()
+            rec = CachedResult("error", INVALID, (), charge)
+            status, value = "error", INVALID
+        budget.spent_seconds += charge
+        budget.spent_evals += 1
+        self.fresh_evals += 1
+        cs = self.space.compiled
+        config = cs.configs[r]
+        obs = Observation.__new__(Observation)
+        object.__setattr__(obs, "__dict__",
+                           {"config": config, "value": value,
+                            "status": status, "charge_s": charge,
+                            "result": rec})
+        obs_by_row[r] = obs
+        seen[r] = True
+        self.memo[cs.ids[r]] = obs
+        self._rows_memo_len += 1
+        self.trace.append((budget.spent_seconds, value, config))
+        return [obs]
+
+    def _commit_rows_loop(self, rows) -> "list[Observation] | BudgetExhausted":
+        """Small-batch commit: the tight scalar loop of ``run_batch`` with
+        every per-evaluation key computation and hash probe replaced by
+        integer row indexing. Strings/value tuples appear only on *fresh*
+        commits (memo key, trace entry) — the serialization boundary."""
+        seen, obs_by_row, _col_arr, col_list, cols = self._row_state()
+        cs = self.space.compiled
+        ids, cfgs = cs.ids, cs.configs
+        memo = self.memo
+        budget = self.budget
+        append = self.trace.append
+        records = cols.records
+        time_list, charge_list = cols.time_list, cols.charge_list
+        new_obs = Observation.__new__
+        set_dict = object.__setattr__  # frozen dataclass: bypass __setattr__
+        # budget accounting mirrored in locals (same left-to-right float
+        # accumulation as Budget.charge), synced back even when
+        # BudgetExhausted aborts the batch mid-way
+        max_s, max_e = budget.max_seconds, budget.max_evals
+        spent_s, spent_e = budget.spent_seconds, budget.spent_evals
+        fresh = self.fresh_evals
+        mean_charge: float | None = None
+        out: list[Observation] = []
+        out_append = out.append
+        result: object = out
+        try:
+            for r in (rows.tolist() if isinstance(rows, np.ndarray)
+                      else rows):
+                obs = obs_by_row[r]
+                if obs is None:
+                    if (max_s is not None and spent_s >= max_s) or \
+                       (max_e is not None and spent_e >= max_e):
+                        budget.spent_seconds = spent_s
+                        budget.spent_evals = spent_e
+                        budget.check()  # same exception as the scalar path
+                    col = col_list[r]
+                    if col >= 0:
+                        rec = records[col]
+                        status = rec.status
+                        value = time_list[col]
+                        charge = charge_list[col]
+                    else:
+                        # valid in the space but not recorded: a failed
+                        # compile at the mean charge, like the keyed path
+                        if mean_charge is None:
+                            mean_charge = self.cache.mean_eval_charge()
+                        charge = mean_charge
+                        rec = CachedResult("error", INVALID, (), charge)
+                        status, value = "error", INVALID
+                    spent_s += charge
+                    spent_e += 1
+                    fresh += 1
+                    config = cfgs[r]
+                    # frozen-dataclass fast construction: one dict display
+                    # replaces per-field object.__setattr__ (identical
+                    # instance: __eq__/fields/hash semantics unchanged)
+                    obs = new_obs(Observation)
+                    set_dict(obs, "__dict__",
+                             {"config": config, "value": value,
+                              "status": status, "charge_s": charge,
+                              "result": rec})
+                    obs_by_row[r] = obs
+                    seen[r] = True
+                    memo[ids[r]] = obs
+                    append((spent_s, value, config))
+                out_append(obs)
+        except BudgetExhausted as e:
+            result = e
+        finally:
+            budget.spent_seconds = spent_s
+            budget.spent_evals = spent_e
+            self.fresh_evals = fresh
+            self._rows_memo_len = len(memo)
+        return result
+
+    def _commit_rows_vectorized(self, rows
+                                ) -> "list[Observation] | BudgetExhausted":
+        """Large-batch commit as whole-array operations: one gather through
+        ``col_of_row``, bitmap freshness (within-batch first occurrence x
+        already-seen rows), a cumulative-sum budget seeded with the exact
+        running spend (the same left-to-right float additions as the scalar
+        loop, so exhaustion points and trace times match to the last bit),
+        and bulk zip-built trace extension. Only fresh evaluations construct
+        Observations in Python; revisits gather from the row-indexed object
+        array."""
+        rows = np.asarray(rows, dtype=np.int64)
+        seen, obs_by_row, col_of_row, _col_list, cols = self._row_state()
+        col_rows = col_of_row[rows]
+        if col_rows.min() < 0:
+            # unrecorded rows take the imputed-miss path of the loop commit
+            return self._commit_rows_loop(rows)
+        n = len(rows)
+        order = np.argsort(rows, kind="stable")
+        sorted_rows = rows[order]
+        first_sorted = np.empty(n, dtype=bool)
+        first_sorted[:1] = True
+        first_sorted[1:] = sorted_rows[1:] != sorted_rows[:-1]
+        first_occ = np.empty(n, dtype=bool)
+        first_occ[order] = first_sorted
+        fresh_idx = np.nonzero(first_occ & ~seen[rows])[0]
+        n_fresh = len(fresh_idx)
+        budget = self.budget
+        max_s, max_e = budget.max_seconds, budget.max_evals
+        cut = n_fresh
+        run_cs = None
+        if n_fresh:
+            # seeded sequential cumsum: run_cs[j] is bit-identical to the
+            # scalar loop's spend after j fresh evaluations
+            run_cs = np.empty(n_fresh + 1, dtype=np.float64)
+            run_cs[0] = budget.spent_seconds
+            run_cs[1:] = cols.charge_s[col_rows[fresh_idx]]
+            np.cumsum(run_cs, out=run_cs)
+            if max_s is not None:
+                # exhaustion raises at the first fresh attempt whose spend-
+                # so-far already reaches the cap; run_cs is non-decreasing
+                cut = min(cut, int(np.searchsorted(run_cs[:n_fresh], max_s,
+                                                   side="left")))
+            if max_e is not None:
+                cut = min(cut, max(0, max_e - budget.spent_evals))
+        exhausted = cut < n_fresh
+        if cut:
+            acc = fresh_idx[:cut]
+            acc_rows = rows[acc]
+            acc_cols = col_rows[acc]
+            seen[acc_rows] = True
+            vals = cols.time_s[acc_cols].tolist()
+            chgs = cols.charge_s[acc_cols].tolist()
+            cs = self.space.compiled
+            cfg_tab, id_tab = cs.configs, cs.ids
+            cfgs_acc = [cfg_tab[r] for r in acc_rows.tolist()]
+            records = cols.records
+            new_obs = Observation.__new__
+            set_dict = object.__setattr__
+            memo = self.memo
+            for r, col, cfg, value, charge in zip(acc_rows.tolist(),
+                                                  acc_cols.tolist(),
+                                                  cfgs_acc, vals, chgs):
+                rec = records[col]
+                obs = new_obs(Observation)
+                set_dict(obs, "__dict__",
+                         {"config": cfg, "value": value,
+                          "status": rec.status, "charge_s": charge,
+                          "result": rec})
+                obs_by_row[r] = obs
+                memo[id_tab[r]] = obs
+            self.trace.extend(zip(run_cs[1:cut + 1].tolist(), vals, cfgs_acc))
+            budget.spent_seconds = float(run_cs[cut])
+            budget.spent_evals += cut
+            self.fresh_evals += cut
+            self._rows_memo_len = len(memo)
+        if exhausted:
+            try:
+                budget.check()  # same exception/message as the scalar path
+            except BudgetExhausted as exc:
+                return exc
+        return [obs_by_row[r] for r in rows.tolist()]
 
     # gather granularity: a strategy may hand over far more configs than the
     # budget allows (random search batches the whole space permutation);
@@ -256,6 +537,12 @@ class SimulationRunner(Runner):
     BATCH_CHUNK_MAX = 2048
 
     def run_batch(self, configs: Sequence[Config]) -> list[Observation]:
+        if (self.columnar and isinstance(configs, RowBatch)
+                and configs.compiled is self.space.compiled):
+            res = self._run_rows(configs.rows)
+            if isinstance(res, BudgetExhausted):
+                raise res
+            return res
         if not self.columnar:
             return super().run_batch(configs)
         cols = self.cache.columns
@@ -331,179 +618,9 @@ class SimulationRunner(Runner):
         return out
 
 
-# one fused gather's key budget: cross-run generation batches (a few dozen
-# runs x a population each) fit comfortably; a whole-space ask replicated
-# across many runs would precompute millions of keys that a budget-capped
-# run never reaches, so oversized fusions fall back to the per-runner
-# chunked path (observably identical either way)
-FUSED_KEY_MAX = 8192
-
-
-def _run_fused_fallback(batches: "Sequence[tuple[Runner, Sequence[Config]]]"
-                        ) -> list:
-    out: list = []
-    for runner, configs in batches:
-        try:
-            out.append(runner.run_batch(configs))
-        except BudgetExhausted as e:
-            out.append(e)
-    return out
-
-
-# below this segment size the vectorized per-segment commit loses to plain
-# bytecode: numpy's per-call overhead (~1-2us x ~14 calls) outweighs the
-# per-evaluation savings for population-sized asks
-FUSED_VECTOR_MIN_SEG = 64
-
-
-def _commit_segment_loop(runner: "SimulationRunner", configs, seg_keys,
-                         cols) -> "list[Observation] | BudgetExhausted":
-    """One runner's segment through the tight scalar commit loop — the
-    body of ``SimulationRunner.run_batch`` minus per-call key computation
-    and chunking (keys arrive precomputed from the fused batch)."""
-    memo = runner.memo
-    memo_get = memo.get
-    budget = runner.budget
-    append = runner.trace.append
-    records = cols.records
-    time_list, charge_list = cols.time_list, cols.charge_list
-    index_get = cols.index.get
-    new_obs = Observation.__new__
-    # budget mirror: same left-to-right float accumulation as Budget.charge,
-    # synced back even when BudgetExhausted aborts the segment mid-way
-    max_s, max_e = budget.max_seconds, budget.max_evals
-    spent_s, spent_e = budget.spent_seconds, budget.spent_evals
-    fresh = runner.fresh_evals
-    mean_charge: float | None = None
-    obs_list: list[Observation] = []
-    out_append = obs_list.append
-    result: object = obs_list
-    try:
-        for key, config in zip(seg_keys, configs):
-            obs = memo_get(key)
-            if obs is None:
-                if (max_s is not None and spent_s >= max_s) or \
-                   (max_e is not None and spent_e >= max_e):
-                    budget.spent_seconds = spent_s
-                    budget.spent_evals = spent_e
-                    budget.check()
-                row = index_get(key, -1)
-                if row >= 0:
-                    rec = records[row]
-                    status = rec.status
-                    value = time_list[row]
-                    charge = charge_list[row]
-                else:
-                    # outside the recorded set: a failed compile at the
-                    # mean charge, exactly like run_batch
-                    if mean_charge is None:
-                        mean_charge = runner.cache.mean_eval_charge()
-                    charge = mean_charge
-                    rec = CachedResult("error", INVALID, (), charge)
-                    status, value = "error", INVALID
-                spent_s += charge
-                spent_e += 1
-                fresh += 1
-                obs = new_obs(Observation)
-                obs.__dict__.update(config=config, value=value,
-                                    status=status, charge_s=charge,
-                                    result=rec)
-                memo[key] = obs
-                append((spent_s, value, config))
-            out_append(obs)
-    except BudgetExhausted as e:
-        result = e
-    finally:
-        budget.spent_seconds = spent_s
-        budget.spent_evals = spent_e
-        runner.fresh_evals = fresh
-    return result
-
-
-def _commit_segment_vectorized(runner: "SimulationRunner", configs, seg_keys,
-                               cols) -> "list[Observation] | BudgetExhausted":
-    """One runner's large segment as whole-array operations: row gather,
-    bitmap freshness (within-segment first occurrence x rows this runner
-    has already evaluated), a cumulative-sum budget seeded with the exact
-    running spend (the same left-to-right float additions as the scalar
-    loop, so exhaustion points and trace times match to the last bit), and
-    bulk zip-built trace extension. Only fresh evaluations construct
-    Observations in Python; revisits gather from the runner's row-indexed
-    object array."""
-    index_get = cols.index.get
-    n = len(configs)
-    rows = np.fromiter((index_get(k, -1) for k in seg_keys),
-                       dtype=np.int64, count=n)
-    if rows.min() < 0:
-        # out-of-recorded-set configs take the keyed imputed-miss path
-        return _commit_segment_loop(runner, configs, seg_keys, cols)
-    seen_rows, obs_by_row, _ = runner._fused_state()
-    order = np.argsort(rows, kind="stable")
-    sorted_rows = rows[order]
-    first_sorted = np.empty(n, dtype=bool)
-    first_sorted[:1] = True
-    first_sorted[1:] = sorted_rows[1:] != sorted_rows[:-1]
-    first_occ = np.empty(n, dtype=bool)
-    first_occ[order] = first_sorted
-    fresh_idx = np.nonzero(first_occ & ~seen_rows[rows])[0]
-    n_fresh = len(fresh_idx)
-    budget = runner.budget
-    max_s, max_e = budget.max_seconds, budget.max_evals
-    cut = n_fresh
-    run_cs = None
-    if n_fresh:
-        fresh_rows = rows[fresh_idx]
-        # seeded sequential cumsum: run_cs[j] is bit-identical to the
-        # scalar loop's spend after j fresh evaluations
-        run_cs = np.empty(n_fresh + 1, dtype=np.float64)
-        run_cs[0] = budget.spent_seconds
-        run_cs[1:] = cols.charge_s[fresh_rows]
-        np.cumsum(run_cs, out=run_cs)
-        if max_s is not None:
-            # exhaustion raises at the first fresh attempt whose spend-so-
-            # far already reaches the cap; run_cs[:-1] is non-decreasing
-            cut = min(cut, int(np.searchsorted(run_cs[:n_fresh], max_s,
-                                               side="left")))
-        if max_e is not None:
-            cut = min(cut, max(0, max_e - budget.spent_evals))
-    exhausted = cut < n_fresh
-    if cut:
-        acc = fresh_idx[:cut]
-        acc_rows = rows[acc]
-        seen_rows[acc_rows] = True
-        vals = cols.time_s[acc_rows].tolist()
-        chgs = cols.charge_s[acc_rows].tolist()
-        cfgs_acc = [configs[j] for j in acc.tolist()]
-        records = cols.records
-        new_obs = Observation.__new__
-        memo = runner.memo
-        obs_acc = []
-        for j, row, cfg, value, charge in zip(acc.tolist(),
-                                              acc_rows.tolist(),
-                                              cfgs_acc, vals, chgs):
-            rec = records[row]
-            obs = new_obs(Observation)
-            obs.__dict__.update(config=cfg, value=value, status=rec.status,
-                                charge_s=charge, result=rec)
-            obs_acc.append(obs)
-            memo[seg_keys[j]] = obs
-        obs_by_row[acc_rows] = obs_acc
-        runner.trace.extend(zip(run_cs[1:cut + 1].tolist(), vals, cfgs_acc))
-        budget.spent_seconds = float(run_cs[cut])
-        budget.spent_evals += cut
-        runner.fresh_evals += cut
-        runner._fused_memo_len = len(memo)
-    if exhausted:
-        try:
-            budget.check()  # same exception/message as the scalar path
-        except BudgetExhausted as exc:
-            return exc
-    return obs_by_row[rows].tolist()
-
-
 def run_fused(batches: "Sequence[tuple[Runner, Sequence[Config]]]"
               ) -> list:
-    """Resolve several runners' batches in one shared gather.
+    """Resolve several runners' batches back-to-back without loop overhead.
 
     ``batches`` is ``[(runner, configs), ...]`` — one entry per concurrent
     tuning run (see ``driver.drive_many``). Returns one element per entry:
@@ -512,44 +629,28 @@ def run_fused(batches: "Sequence[tuple[Runner, Sequence[Config]]]"
     runner's committed state — memo, trace, budget — identical in both
     cases, partial results included).
 
-    When every runner is a columnar ``SimulationRunner`` over the *same*
-    cache, the fusion computes config ids for the whole concatenation in
-    one batched call and commits per runner without any per-run
-    ``run_batch`` call overhead — population-sized segments through a
-    tight scalar loop, large segments (``FUSED_VECTOR_MIN_SEG``+) through
-    whole-array commits (``_commit_segment_vectorized``). Runners are
+    Since the index-native refactor the shared work the fusion used to do
+    — batching config-id computation across runs — no longer exists:
+    strategies ask in ``RowBatch`` form, and a columnar runner resolves
+    rows with no key work at all (``SimulationRunner._run_rows``:
+    population-sized segments through a tight integer loop, large segments
+    through whole-array commits). Anything else — thread-bridged legacy
+    asks, scalar runners, plain config lists — goes through its runner's
+    own ``run_batch``, observably identical either way. Runners are
     independent (own memo/budget/trace), so per-runner observable order is
-    preserved exactly; anything non-fusable falls back to per-runner
-    ``run_batch`` calls (observably identical either way).
+    preserved exactly.
     """
-    if not batches:
-        return []
-    first = batches[0][0]
-    fusable = isinstance(first, SimulationRunner) and first.columnar
-    if fusable:
-        cache = first.cache
-        fusable = all(isinstance(r, SimulationRunner) and r.columnar
-                      and r.cache is cache for r, _ in batches)
-    total = 0
-    for _, configs in batches:
-        total += len(configs)
-    if not fusable or total == 0 or total > FUSED_KEY_MAX:
-        return _run_fused_fallback(batches)
-    space = first.space
-    cols = first.cache.columns
-    all_cfgs: list = []
-    for _, configs in batches:
-        all_cfgs.extend(configs)
-    keys = space.config_ids(all_cfgs)
     out: list = []
-    pos = 0
     for runner, configs in batches:
-        seg_keys = keys[pos:pos + len(configs)]
-        pos += len(configs)
-        commit = (_commit_segment_vectorized
-                  if len(configs) >= FUSED_VECTOR_MIN_SEG
-                  else _commit_segment_loop)
-        out.append(commit(runner, configs, seg_keys, cols))
+        if (isinstance(configs, RowBatch)
+                and isinstance(runner, SimulationRunner) and runner.columnar
+                and configs.compiled is runner.space.compiled):
+            out.append(runner._run_rows(configs.rows))
+        else:
+            try:
+                out.append(runner.run_batch(configs))
+            except BudgetExhausted as e:
+                out.append(e)
     return out
 
 

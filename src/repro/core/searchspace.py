@@ -1,20 +1,34 @@
-"""Constrained discrete search spaces (paper Sec. III-A).
+"""Constrained discrete search spaces (paper Sec. III-A) — compiled facade.
 
 The space is the Cartesian product of tunable value sets filtered by
-constraints. Spaces in auto-tuning are small enough to enumerate validity
-(the paper's benchmark hub brute-forces them) but far too expensive to
-*measure* exhaustively on hardware — which is exactly what the simulation
-mode addresses.
+constraints. Since the index-native refactor this module is a deprecation
+shim: the public constructor and method signatures are unchanged, but every
+hot query delegates to a lazily **compiled** array representation
+(``core.space.CompiledSpace``) — a validity bitmap plus a
+``(n_valid, n_tunables)`` value-index matrix built once by blocked
+vectorized enumeration, CSR neighbor tables for both neighbor semantics,
+and precomputed single-move repair tables. Integer row indices are the
+native config form through the whole simulation hot path; this facade
+translates between rows and the value-tuple/config-id forms at the API
+boundary.
 
-Key operations used by the optimization strategies:
+Key operations used by the optimization strategies (all signatures as
+before the refactor, all results bit-identical to the frozen reference in
+``core.space.reference``):
   - ``size`` / ``valid_configs``: enumeration of the valid space
-  - ``random_config(rng)``: uniform sampling of valid configs
-  - ``neighbors(config)``: Hamming-adjacent valid configs (one tunable
-    changed), with numerically-adjacent values first — the neighborhood
-    structure used by local-search strategies in Kernel Tuner
+  - ``random_config(rng)``: uniform sampling of valid configs (same rng
+    draw order as the scalar rejection sampler)
+  - ``neighbors(config)``: Hamming-adjacent valid configs, served as one
+    CSR slice
+  - ``nearest_valid`` / ``decode_batch``: repair through the move tables
   - ``to_indices`` / ``from_indices``: positional encoding used by
     continuous-relaxation strategies (PSO, differential evolution, dual
-    annealing) which operate on index vectors and round to valid configs.
+    annealing).
+
+Index-native callers (the strategies, ``SimulationRunner``) should use
+``space.compiled`` directly and exchange ``core.space.RowBatch`` batches;
+the tuple-based methods here exist for external code, the scalar reference
+engine, and serialization.
 """
 from __future__ import annotations
 
@@ -23,6 +37,7 @@ from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
+from .space import CompiledSpace, compile_space
 from .tunable import Config, Constraint, Tunable
 
 
@@ -39,15 +54,30 @@ class SearchSpace:
         self.constraints = tuple(constraints)
         self._names = tuple(names)
         self._index = {n: i for i, n in enumerate(names)}
-        self._valid: list[Config] | None = None
-        self._valid_set: frozenset | None = None
-        # hot-path caches: simulated tuning calls neighbors()/nearest_valid()
-        # and config_id() millions of times on the same few thousand configs
-        self._nbr_cache: dict[tuple, list[Config]] = {}
-        self._repair_cache: dict[Config, Config] = {}
+        self._compiled: CompiledSpace | None = None
+        # config-id memo for the tuple-keyed compat path (scalar engine,
+        # out-of-tree callers); row-native code reads ``compiled.ids``
         self._id_cache: dict[Config, str] = {}
-        self._validity_cache: dict[Config, bool] = {}
-        self._decode_tables: tuple | None = None
+
+    # --------------------------------------------------------------- compiled
+    @property
+    def compiled(self) -> CompiledSpace:
+        """The array-backed form, compiled on first use (and after
+        unpickling — the arrays never cross process boundaries)."""
+        cs = self._compiled
+        if cs is None:
+            cs = self._compiled = compile_space(self.tunables,
+                                                self.constraints, self.name)
+        return cs
+
+    def __getstate__(self) -> dict:
+        """Pickle without the compiled arrays or id memo: parallel
+        campaigns ship spaces to worker processes once per pool, and
+        recompiling there is cheaper than shipping bitmap + CSR tables."""
+        state = self.__dict__.copy()
+        state["_compiled"] = None
+        state["_id_cache"] = {}
+        return state
 
     # ------------------------------------------------------------------ views
     @property
@@ -69,55 +99,30 @@ class SearchSpace:
 
     # ------------------------------------------------------------ enumeration
     def is_valid(self, config: Config) -> bool:
-        """Validity, memoized per config: population strategies re-check the
-        same configs every generation (repair, neighbor moves), and for hub
-        spaces the membership constraint costs a string join per call."""
-        hit = self._validity_cache.get(config)
-        if hit is None:
-            hit = self._validity_cache[config] = self._compute_valid(config)
-        return hit
-
-    def _compute_valid(self, config: Config) -> bool:
+        """Validity as one bitmap probe (replaces the per-config dict
+        cache; for hub spaces the membership constraint used to cost a
+        string join per miss)."""
         if len(config) != len(self.tunables):
             return False
-        for t, v in zip(self.tunables, config):
-            if v not in t.values:
-                return False
-        d = self.as_dict(config)
-        return all(c(d) for c in self.constraints)
-
-    def _enumerate(self) -> list[Config]:
-        if self._valid is None:
-            out: list[Config] = []
-            # depth-first product with early constraint checks on full configs;
-            # spaces here are ≤ ~1e6 cartesian, fine to enumerate.
-            def rec(i: int, prefix: tuple):
-                if i == len(self.tunables):
-                    d = dict(zip(self._names, prefix))
-                    if all(c(d) for c in self.constraints):
-                        out.append(prefix)
-                    return
-                for v in self.tunables[i].values:
-                    rec(i + 1, prefix + (v,))
-            rec(0, ())
-            self._valid = out
-            self._valid_set = frozenset(out)
-        return self._valid
+        cs = self.compiled
+        idx = cs.vidx_of_config(config)
+        if idx is None:  # some value outside its tunable's value set
+            return False
+        return bool(cs.bitmap[cs.flat_of_vidx(idx)])
 
     @property
     def valid_configs(self) -> list:
-        return list(self._enumerate())
+        return list(self.compiled.configs)
 
     @property
     def size(self) -> int:
-        return len(self._enumerate())
+        return self.compiled.n_valid
 
     def config_id(self, config: Config) -> str:
         """Stable string key for caches (T4 data uses stringified configs).
 
-        Memoized per space: campaigns revisit the same few thousand configs
-        millions of times, and the str-join dominates the lookup cost. The
-        cache is bounded by the visited-config count (≤ cartesian size)."""
+        Memoized per space; row-native code never calls this — it reads the
+        precomputed ``compiled.ids`` table at the serialization boundary."""
         key = self._id_cache.get(config)
         if key is None:
             key = self._id_cache[config] = ",".join(str(v) for v in config)
@@ -125,7 +130,7 @@ class SearchSpace:
 
     def config_ids(self, configs: Sequence[Config]) -> list[str]:
         """Batch ``config_id`` — one call for a whole generation (the
-        ``BatchRunner`` hot path)."""
+        tuple-keyed ``BatchRunner`` compat path)."""
         cache = self._id_cache
         out = []
         for config in configs:
@@ -136,34 +141,19 @@ class SearchSpace:
         return out
 
     def config_from_id(self, key: str) -> Config:
-        parts = key.split(",")
-        out = []
-        for t, s in zip(self.tunables, parts):
-            match = None
-            for v in t.values:
-                if str(v) == s:
-                    match = v
-                    break
-            if match is None:
-                raise KeyError(f"{s!r} not a value of {t.name!r}")
-            out.append(match)
-        return tuple(out)
+        """Inverse of ``config_id`` via the per-tunable ``str(value) ->
+        value`` tables (``Tunable.from_str``) — O(1) per value instead of
+        the former O(cardinality) scan (it is called per record on journal
+        resume and cache merge)."""
+        return tuple(t.from_str(s)
+                     for t, s in zip(self.tunables, key.split(",")))
 
     # --------------------------------------------------------------- sampling
     def random_config(self, rng: random.Random) -> Config:
-        """Uniform over *valid* configs.
-
-        Uses rejection sampling first (cheap when the valid fraction is
-        high — typical in auto-tuning), falling back to enumeration.
-        """
-        for _ in range(64):
-            c = tuple(rng.choice(t.values) for t in self.tunables)
-            if self.is_valid(c):
-                return c
-        valid = self._enumerate()
-        if not valid:
-            raise ValueError(f"space {self.name!r} has no valid configs")
-        return valid[rng.randrange(len(valid))]
+        """Uniform over *valid* configs (same draws as the scalar sampler:
+        rejection first, enumeration fallback)."""
+        cs = self.compiled
+        return cs.configs[cs.random_row(rng)]
 
     # ------------------------------------------------------------- neighbors
     def neighbors(self, config: Config, strictly_adjacent: bool = False) -> list:
@@ -172,12 +162,22 @@ class SearchSpace:
         ``strictly_adjacent``: restrict to numerically adjacent values in the
         tunable's declared order (Kernel Tuner's 'adjacent' neighbor method);
         otherwise all alternative values of each tunable are candidates,
-        ordered by distance in the value order ('Hamming+ordered').
+        ordered by distance in the value order ('Hamming+ordered'). Served
+        as one CSR row slice; invalid starting configs (allowed by the old
+        API) fall back to the scalar enumeration.
         """
-        key = (config, strictly_adjacent)
-        hit = self._nbr_cache.get(key)
-        if hit is not None:
-            return hit
+        cs = self.compiled
+        row = cs.row_of_config(config)
+        if row >= 0:
+            configs = cs.configs
+            return [configs[r] for r in
+                    cs.neighbors_rows(row, strictly_adjacent).tolist()]
+        return self._neighbors_scalar(config, strictly_adjacent)
+
+    def _neighbors_scalar(self, config: Config,
+                          strictly_adjacent: bool) -> list:
+        """Legacy path for configs outside the compiled rows (invalid or
+        out-of-vocabulary starting points)."""
         out: list[Config] = []
         for i, t in enumerate(self.tunables):
             j = t.index_of(config[i])
@@ -190,7 +190,6 @@ class SearchSpace:
                 c = config[:i] + (t.values[k],) + config[i + 1:]
                 if self.is_valid(c):
                     out.append(c)
-        self._nbr_cache[key] = out
         return out
 
     # ---------------------------------------------------- index-vector coding
@@ -210,34 +209,30 @@ class SearchSpace:
 
     def decode_batch(self, x: "np.ndarray", rng: random.Random) -> list:
         """Vectorized ``from_indices`` + ``nearest_valid`` over a (P, T)
-        index matrix — the ask half of a population strategy's batch step.
-
-        Rounds and clips every position in a handful of whole-matrix numpy
-        ops (``np.rint`` matches Python ``round``: both half-to-even), maps
-        index columns to value columns with one ``take`` per tunable, then
-        repairs in row order — repairs draw from ``rng`` exactly as the
-        per-particle loop did, so the stream stays bit-identical.
-        """
-        x = np.asarray(x, dtype=np.float64)
-        if self._decode_tables is None:
-            self._decode_tables = (
-                [np.array(t.values, dtype=object) for t in self.tunables],
-                np.array([t.cardinality - 1 for t in self.tunables],
-                         dtype=np.float64))
-        tables, hi = self._decode_tables
-        k = np.clip(np.rint(x), 0.0, hi).astype(np.intp)
-        columns = [tables[i][k[:, i]].tolist() for i in range(len(tables))]
-        return [self.nearest_valid(c, rng) for c in zip(*columns)]
+        index matrix; repairs draw from ``rng`` exactly as the per-particle
+        scalar loop did. Index-native callers use
+        ``compiled.decode_rows`` and skip the tuple materialization."""
+        cs = self.compiled
+        configs = cs.configs
+        return [configs[r] for r in cs.decode_rows(x, rng).tolist()]
 
     def nearest_valid(self, config: Config, rng: random.Random) -> Config:
-        """Repair an invalid config: breadth-first over single-tunable moves,
-        then random restart. The deterministic BFS outcome is memoized; the
-        random fallback is not (to avoid cross-run correlation)."""
-        if self.is_valid(config):
+        """Repair an invalid config: breadth-first over single-tunable
+        moves (precomputed move tables, memoized outcome), then random
+        restart drawing from ``rng`` in the exact scalar order."""
+        cs = self.compiled
+        idx = cs.vidx_of_config(config)
+        if idx is None:
+            return self._nearest_valid_oov(config, rng)
+        flat = cs.flat_of_vidx(idx)
+        if cs.bitmap[flat]:
             return config
-        hit = self._repair_cache.get(config)
-        if hit is not None:
-            return hit
+        return cs.configs[cs.repair_flat(flat, rng)]
+
+    def _nearest_valid_oov(self, config: Config, rng: random.Random) -> Config:
+        """Legacy BFS for configs with out-of-vocabulary values (the move
+        tables only cover the Cartesian product; the old code treated an
+        unknown value as index 0)."""
         frontier = [config]
         seen = {config}
         for _depth in range(3):
@@ -245,14 +240,14 @@ class SearchSpace:
             for c in frontier:
                 for i, t in enumerate(self.tunables):
                     j = t.index_of(c[i]) if c[i] in t.values else 0
-                    order = sorted(range(t.cardinality), key=lambda k: abs(k - j))
+                    order = sorted(range(t.cardinality),
+                                   key=lambda k: abs(k - j))
                     for k in order:
                         cc = c[:i] + (t.values[k],) + c[i + 1:]
                         if cc in seen:
                             continue
                         seen.add(cc)
                         if self.is_valid(cc):
-                            self._repair_cache[config] = cc
                             return cc
                         nxt.append(cc)
             frontier = nxt[:256]

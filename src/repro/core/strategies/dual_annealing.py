@@ -13,6 +13,12 @@ strategy cannot be inverted into a native state machine; it opts into the
 runs on a bridge thread and every objective call becomes one ask/tell
 exchange. The run is still suspendable: the bridge state serializes as a
 replay log (initial RNG state + observations told so far).
+
+It is also the one strategy that stays on the value-tuple runner path
+after the index-native refactor: scipy hands back float vectors one at a
+time, so there is no batch to express as rows — but the objective's
+round+repair now resolves through the compiled space's move tables
+(``compiled.repair_x``), the former per-config scan-and-BFS hot spot.
 """
 from __future__ import annotations
 
@@ -47,9 +53,13 @@ class DualAnnealing(Strategy):
         bounds = space.bounds
         # degenerate 1-value dims break scipy bounds; widen epsilon
         bounds = [(lo, hi if hi > lo else lo + 1e-6) for lo, hi in bounds]
+        cs = space.compiled
+        configs = cs.configs
 
         def objective(x: np.ndarray) -> float:
-            cfg = space.nearest_valid(space.from_indices(x), rng)
+            # round+repair through the compiled move tables (bit-identical
+            # to from_indices + nearest_valid, minus the per-call BFS)
+            cfg = configs[cs.repair_x(x, rng)]
             v = runner(cfg)  # raises BudgetExhausted when spent
             return FAILURE_FITNESS if v == float("inf") else v
 

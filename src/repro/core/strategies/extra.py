@@ -14,6 +14,12 @@ neighbor list as one batch (observably identical to the former per-neighbor
 loop under the BatchRunner contract — and one vectorized gather on a
 simulation runner); BasinHopping's descent is first-improvement and must
 keep yielding one config at a time.
+
+All four are index-native: walks live on compiled-space rows (whole
+neighborhoods are CSR slices wrapped in ``RowBatch``es), perturbations
+operate on value-index tuples, and repair runs over the precomputed move
+tables — with every rng draw at the same stream position as the scalar
+implementation.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ import numpy as np
 
 from ..driver import SearchState
 from ..searchspace import SearchSpace
+from ..space import RowBatch
 from .base import GeneratorStrategy, Strategy
 
 
@@ -90,29 +97,30 @@ class DifferentialEvolution(Strategy):
         return np.where(cross, mutant, snapshot[i])
 
     def ask(self, state: _DEState):
-        space, rng = state.space, state.rng
+        rng = state.rng
+        cs = state.space.compiled
         popsize = max(4, int(self.hp("popsize")))
         if state.pop is None:  # start / restart: fresh random population
-            state.pop = np.stack([space.to_indices(space.random_config(rng))
+            state.pop = np.stack([cs.x_of_row(cs.random_row(rng))
                                   for _ in range(popsize)])
             state.fit = None
-            cfgs = space.decode_batch(state.pop, rng)
-            state.asked = ("init", None, cfgs)
-            return cfgs
+            rows = cs.decode_rows(state.pop, rng)
+            state.asked = ("init", None, rows)
+            return RowBatch(cs, rows)
         if str(self.hp("updating")) == "deferred":
             # whole-generation ask: trials come from this generation's
             # snapshot, selection applies in tell
             trials = [self._make_trial(state, i, state.pop)
                       for i in range(popsize)]
-            cfgs = space.decode_batch(np.asarray(trials), rng)
-            state.asked = ("deferred", trials, cfgs)
-            return cfgs
+            rows = cs.decode_rows(np.asarray(trials), rng)
+            state.asked = ("deferred", trials, rows)
+            return RowBatch(cs, rows)
         # immediate updating: one trial per ask, built against the current
         # (already part-updated) population
         trial = self._make_trial(state, state.i, state.pop)
-        cfg = space.nearest_valid(space.from_indices(trial), rng)
-        state.asked = ("immediate", trial, [cfg])
-        return [cfg]
+        row = cs.repair_x(trial, rng)
+        state.asked = ("immediate", trial, row)
+        return RowBatch(cs, (row,))
 
     def tell(self, state: _DEState, observations) -> None:
         popsize = max(4, int(self.hp("popsize")))
@@ -159,15 +167,15 @@ class BasinHopping(GeneratorStrategy):
         "local_iters": (8, 16, 24, 32, 48, 64, 96, 128),
     }
 
-    def _greedy_descent(self, start, space, max_iters):
+    def _greedy_descent(self, start, cs, max_iters):
         # first-improvement: each neighbor must be observed before deciding
-        # whether to evaluate the next, so this yields one config at a time
+        # whether to evaluate the next, so this yields one row at a time
         cur = start
-        f_cur = self.fitness((yield [start])[0].value)
+        f_cur = self.fitness((yield RowBatch(cs, (start,)))[0].value)
         for _ in range(max_iters):
             improved = False
-            for n in space.neighbors(cur, strictly_adjacent=True):
-                f = self.fitness((yield [n])[0].value)
+            for n in cs.neighbors_rows(cur, strictly_adjacent=True).tolist():
+                f = self.fitness((yield RowBatch(cs, (n,)))[0].value)
                 if f < f_cur:
                     cur, f_cur, improved = n, f, True
                     break
@@ -179,18 +187,18 @@ class BasinHopping(GeneratorStrategy):
         T = float(self.hp("T"))
         step = int(self.hp("stepsize"))
         local_iters = int(self.hp("local_iters"))
+        cs = space.compiled
         cur, f_cur = yield from self._greedy_descent(
-            space.random_config(rng), space, local_iters)
+            cs.random_row(rng), cs, local_iters)
         while True:
             # hop: jump `step` positions in value-order on a few tunables
-            jumped = list(cur)
-            for i, t in enumerate(space.tunables):
+            jumped = list(cs.idx_tuples[cur])
+            for i, card in enumerate(cs.cards):
                 if rng.random() < 0.5:
-                    j = t.index_of(jumped[i]) + rng.choice((-step, step))
-                    j = max(0, min(t.cardinality - 1, j))
-                    jumped[i] = t.values[j]
-            start = space.nearest_valid(tuple(jumped), rng)
-            cand, f_cand = yield from self._greedy_descent(start, space,
+                    j = jumped[i] + rng.choice((-step, step))
+                    jumped[i] = max(0, min(card - 1, j))
+            start = cs.repair_vidx(tuple(jumped), rng)
+            cand, f_cand = yield from self._greedy_descent(start, cs,
                                                            local_iters)
             d_rel = (f_cand - f_cur) / max(abs(f_cur), 1e-30)
             if d_rel <= 0 or rng.random() < math.exp(-d_rel / max(T, 1e-9)):
@@ -212,17 +220,18 @@ class GreedyILS(GeneratorStrategy):
     def _generate(self, space: SearchSpace, rng: random.Random):
         k = int(self.hp("perturbation"))
         p_restart = float(self.hp("restart_chance"))
-        cur = space.random_config(rng)
-        f_cur = self.fitness((yield [cur])[0].value)
+        cs = space.compiled
+        cur = cs.random_row(rng)
+        f_cur = self.fitness((yield RowBatch(cs, (cur,)))[0].value)
         while True:
             # greedy descent to local optimum (best-improvement: the whole
-            # neighborhood is one ask)
+            # neighborhood is one ask — one CSR slice, one row gather)
             while True:
-                nbrs = space.neighbors(cur)
+                nbrs = cs.neighbors_rows(cur)
                 best_n, best_f = None, f_cur
-                if nbrs:
-                    obs = yield nbrs
-                    for n, o in zip(nbrs, obs):
+                if len(nbrs):
+                    obs = yield RowBatch(cs, nbrs)
+                    for n, o in zip(nbrs.tolist(), obs):
                         f = self.fitness(o.value)
                         if f < best_f:
                             best_n, best_f = n, f
@@ -231,16 +240,15 @@ class GreedyILS(GeneratorStrategy):
                 cur, f_cur = best_n, best_f
             # perturb k random tunables (or restart)
             if rng.random() < p_restart:
-                cur = space.random_config(rng)
+                cur = cs.random_row(rng)
             else:
-                out = list(cur)
-                idxs = rng.sample(range(len(space.tunables)),
-                                  min(k, len(space.tunables)))
+                out = list(cs.idx_tuples[cur])
+                idxs = rng.sample(range(cs.n_tunables),
+                                  min(k, cs.n_tunables))
                 for i in idxs:
-                    t = space.tunables[i]
-                    out[i] = t.values[rng.randrange(t.cardinality)]
-                cur = space.nearest_valid(tuple(out), rng)
-            f_cur = self.fitness((yield [cur])[0].value)
+                    out[i] = rng.randrange(cs.cards[i])
+                cur = cs.repair_vidx(tuple(out), rng)
+            f_cur = self.fitness((yield RowBatch(cs, (cur,)))[0].value)
 
 
 class MultiStartLocalSearch(GeneratorStrategy):
@@ -251,15 +259,16 @@ class MultiStartLocalSearch(GeneratorStrategy):
 
     def _generate(self, space: SearchSpace, rng: random.Random):
         adjacent = bool(self.hp("adjacent_only"))
+        cs = space.compiled
         while True:
-            cur = space.random_config(rng)
-            f_cur = self.fitness((yield [cur])[0].value)
+            cur = cs.random_row(rng)
+            f_cur = self.fitness((yield RowBatch(cs, (cur,)))[0].value)
             while True:
-                nbrs = space.neighbors(cur, strictly_adjacent=adjacent)
+                nbrs = cs.neighbors_rows(cur, strictly_adjacent=adjacent)
                 best_n, best_f = None, f_cur
-                if nbrs:
-                    obs = yield nbrs
-                    for n, o in zip(nbrs, obs):
+                if len(nbrs):
+                    obs = yield RowBatch(cs, nbrs)
+                    for n, o in zip(nbrs.tolist(), obs):
                         f = self.fitness(o.value)
                         if f < best_f:
                             best_n, best_f = n, f

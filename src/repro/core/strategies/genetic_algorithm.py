@@ -12,6 +12,14 @@ random one at start and after every ``maxiter``-generation restart),
 evaluations exactly as the pre-refactor loop did, so traces are
 bit-identical.
 
+Index-native: genomes are value-*index* tuples of the compiled space.
+Crossover and mutation are generic tuple operations, so they work
+unchanged on indices (equality per gene is preserved — value<->index is a
+bijection per tunable), mutation draws the same ``randrange(cardinality)``,
+and repair runs over the precomputed move tables. ``ask`` gathers the
+population's rows in one vectorized lookup and hands the runner a
+``RowBatch``.
+
 Hyperparameters:
   method:          crossover operator
   popsize:         population size           {10, 20, 30} / {2 … 50}
@@ -24,6 +32,7 @@ import random
 
 from ..driver import SearchState
 from ..searchspace import SearchSpace
+from ..space import CompiledSpace, RowBatch
 from .base import Strategy
 
 
@@ -73,7 +82,7 @@ CROSSOVERS = {
 class _GAState(SearchState):
     def __init__(self, space: SearchSpace, rng: random.Random):
         super().__init__(space, rng)
-        self.pop: list | None = None  # None = (re)initialize on next ask
+        self.pop: list | None = None  # index-tuple genomes; None = restart
         self.gen = 0
 
 
@@ -98,23 +107,26 @@ class GeneticAlgorithm(Strategy):
         return _GAState(space, rng)
 
     def ask(self, state: _GAState):
+        cs = state.space.compiled
         if state.pop is None:
             popsize = int(self.hp("popsize"))
-            state.pop = [state.space.random_config(state.rng)
+            idx_tab = cs.idx_tuples
+            state.pop = [idx_tab[cs.random_row(state.rng)]
                          for _ in range(popsize)]
             state.gen = 0
         # the whole generation is evaluated in one batch (one vectorized
-        # lookup on a simulation runner); population order is preserved, so
-        # the trace — and every downstream score — matches the former
-        # one-config-at-a-time loop
-        return state.pop
+        # row gather on a simulation runner); population order is
+        # preserved, so the trace — and every downstream score — matches
+        # the former one-config-at-a-time loop
+        return RowBatch(cs, cs.rows_of_vidx(state.pop))
 
     def tell(self, state: _GAState, observations) -> None:
         popsize = int(self.hp("popsize"))
         generations = int(self.hp("maxiter"))
         p_mut = 1.0 / float(self.hp("mutation_chance"))
         crossover = CROSSOVERS[str(self.hp("method"))]
-        space, rng, pop = state.space, state.rng, state.pop
+        rng, pop = state.rng, state.pop
+        cs = state.space.compiled
 
         scored = sorted(((self.fitness(o.value), i, c)
                          for i, (o, c) in enumerate(zip(observations, pop))),
@@ -127,8 +139,8 @@ class GeneticAlgorithm(Strategy):
             a, b = rng.choices(ranked, weights=weights, k=2)
             c1, c2 = crossover(a, b, rng)
             for child in (c1, c2):
-                child = self._mutate(child, space, rng, p_mut)
-                child = space.nearest_valid(child, rng)
+                child = self._mutate(child, cs, rng, p_mut)
+                child = cs.idx_tuples[cs.repair_vidx(child, rng)]
                 children.append(child)
                 if len(children) >= popsize:
                     break
@@ -142,10 +154,10 @@ class GeneticAlgorithm(Strategy):
             state.pop = children
 
     @staticmethod
-    def _mutate(config: tuple, space: SearchSpace, rng: random.Random,
+    def _mutate(genome: tuple, cs: CompiledSpace, rng: random.Random,
                 p_mut: float) -> tuple:
-        out = list(config)
-        for i, t in enumerate(space.tunables):
+        out = list(genome)
+        for i, card in enumerate(cs.cards):
             if rng.random() < p_mut:
-                out[i] = t.values[rng.randrange(t.cardinality)]
+                out[i] = rng.randrange(card)
         return tuple(out)

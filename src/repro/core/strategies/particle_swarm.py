@@ -13,6 +13,12 @@ draw from the run RNG in ask and velocity updates draw from the numpy
 generator in tell — the same interleaving as the pre-refactor loop, so
 traces are bit-identical.
 
+Index-native: positions decode to compiled-space *rows*
+(``compiled.decode_rows``: one whole-matrix round/clip, repair through the
+move tables), the ask is a ``RowBatch``, and best-position reads come
+straight from the value-index matrix (``x_of_row`` == the old
+``to_indices`` of the decoded config).
+
 Hyperparameters:
   popsize: swarm size                {10, 20, 30} / {2 … 50}
   maxiter: iterations                {50, 100, 150} / {10 … 200}
@@ -28,6 +34,7 @@ import numpy as np
 
 from ..driver import SearchState
 from ..searchspace import SearchSpace
+from ..space import RowBatch
 from .base import Strategy
 
 
@@ -45,7 +52,7 @@ class _PSOState(SearchState):
         self.vel = self.pbest = self.pbest_f = self.gbest = None
         self.gbest_f = np.inf
         self.it = 0
-        self.asked: list | None = None  # decoded configs of the open ask
+        self.asked: np.ndarray | None = None  # decoded rows of the open ask
 
 
 class ParticleSwarm(Strategy):
@@ -68,10 +75,11 @@ class ParticleSwarm(Strategy):
         return _PSOState(space, rng)
 
     def ask(self, state: _PSOState):
-        space, rng = state.space, state.rng
+        rng = state.rng
+        cs = state.space.compiled
         if state.pos is None:  # start / post-restart initialization
             popsize = int(self.hp("popsize"))
-            state.pos = np.stack([space.to_indices(space.random_config(rng))
+            state.pos = np.stack([cs.x_of_row(cs.random_row(rng))
                                   for _ in range(popsize)])
             state.vel = (state.np_rng.uniform(-1, 1, state.pos.shape)
                          * state.span * 0.25)
@@ -81,21 +89,22 @@ class ParticleSwarm(Strategy):
             state.it = 0
         # decode + repair the whole swarm in one vectorized call (repairs
         # draw from rng exactly as the per-particle loop did)
-        state.asked = space.decode_batch(state.pos, rng)
-        return state.asked
+        state.asked = cs.decode_rows(state.pos, rng)
+        return RowBatch(cs, state.asked)
 
     def tell(self, state: _PSOState, observations) -> None:
-        space = state.space
+        cs = state.space.compiled
         c1, c2 = float(self.hp("c1")), float(self.hp("c2"))
         w = float(self.hp("w"))
-        for i, (o, cfg) in enumerate(zip(observations, state.asked)):
+        for i, (o, row) in enumerate(zip(observations,
+                                         state.asked.tolist())):
             f = self.fitness(o.value)
             if f < state.pbest_f[i]:
                 state.pbest_f[i] = f
-                state.pbest[i] = space.to_indices(cfg)
+                state.pbest[i] = cs.x_of_row(row)
             if f < state.gbest_f:
                 state.gbest_f = f
-                state.gbest = space.to_indices(cfg)
+                state.gbest = cs.x_of_row(row)
         state.asked = None
         np_rng, pos = state.np_rng, state.pos
         r1 = np_rng.uniform(size=pos.shape)

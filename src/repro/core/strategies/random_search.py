@@ -5,6 +5,7 @@ import random
 
 from ..driver import SearchState
 from ..searchspace import SearchSpace
+from ..space import RowBatch
 from .base import Strategy
 
 
@@ -26,15 +27,18 @@ class RandomSearch(Strategy):
         # Sample *without replacement* over valid configs (Kernel Tuner
         # semantics: the tuner cache makes revisits free, so random search
         # is effectively a random permutation of the space). The whole
-        # permutation is ONE ask: a vectorized runner resolves it in a
-        # single columnar gather, and budget exhaustion stops it at exactly
+        # permutation is ONE ask — index-native: shuffling the row range
+        # draws from rng exactly like shuffling the config list (Fisher-
+        # Yates only reads the length), and the RowBatch resolves as one
+        # columnar row gather, with budget exhaustion stopping at exactly
         # the same config as the scalar loop.
         if state.asked:
             return None  # the permutation survived the budget: we are done
         state.asked = True
-        order = list(state.space.valid_configs)
+        cs = state.space.compiled
+        order = list(range(cs.n_valid))
         state.rng.shuffle(order)
-        return order
+        return RowBatch(cs, order)
 
     def tell(self, state: _RandomSearchState, observations) -> None:
         pass  # best-so-far tracking lives in the runner's trace

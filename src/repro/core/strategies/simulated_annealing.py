@@ -11,6 +11,12 @@ the pre-refactor imperative loop with each runner call replaced by a yield;
 the generator bridge turns it into ask/tell and keeps the run suspendable
 through its replay log.
 
+Index-native: the walk lives entirely on compiled-space rows — neighbors
+are one CSR slice per move and the yields are ``RowBatch``es, so no value
+tuple or config-id string is ever built inside the loop. The rng stream is
+unchanged (the neighbor pick indexes the same-length, same-order list the
+scalar space produced).
+
 Hyperparameters (matching the paper):
   T:        initial temperature            {0.5, 1.0, 1.5} / {0.1 … 2.0}
   T_min:    restart temperature            {1e-4, 1e-3, 1e-2} / {1e-4 … 0.1}
@@ -23,6 +29,7 @@ import math
 import random
 
 from ..searchspace import SearchSpace
+from ..space import RowBatch
 from .base import GeneratorStrategy
 
 
@@ -47,20 +54,23 @@ class SimulatedAnnealing(GeneratorStrategy):
         T_min = float(self.hp("T_min"))
         alpha = float(self.hp("alpha"))
         maxiter = int(self.hp("maxiter"))
+        cs = space.compiled
 
         while True:  # restart loop; terminated by BudgetExhausted
-            current = space.random_config(rng)
-            f_cur = self.fitness((yield [current])[0].value)
+            current = cs.random_row(rng)
+            f_cur = self.fitness((yield RowBatch(cs, (current,)))[0].value)
             T = T0
             while T > T_min:
                 for _ in range(maxiter):
-                    nbrs = space.neighbors(current)
-                    if not nbrs:
-                        current = space.random_config(rng)
-                        f_cur = self.fitness((yield [current])[0].value)
+                    nbrs = cs.neighbors_rows(current)
+                    if not len(nbrs):
+                        current = cs.random_row(rng)
+                        f_cur = self.fitness(
+                            (yield RowBatch(cs, (current,)))[0].value)
                         continue
-                    cand = nbrs[rng.randrange(len(nbrs))]
-                    f_new = self.fitness((yield [cand])[0].value)
+                    cand = int(nbrs[rng.randrange(len(nbrs))])
+                    f_new = self.fitness(
+                        (yield RowBatch(cs, (cand,)))[0].value)
                     d_rel = (f_new - f_cur) / max(abs(f_cur), 1e-30)
                     if d_rel <= 0 or rng.random() < math.exp(-d_rel / max(T, 1e-9)):
                         current, f_cur = cand, f_new

@@ -10,6 +10,7 @@ order the tunables were declared; dict views are provided for readability.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Mapping, Sequence
 
 Value = Any
@@ -38,8 +39,43 @@ class Tunable:
     def cardinality(self) -> int:
         return len(self.values)
 
+    @functools.cached_property
+    def position(self) -> dict:
+        """value -> index table; the O(1) core of ``index_of`` and of the
+        compiled-space row lookups (``core.space``). First declaration wins
+        like ``list.index`` (equal-hashing values such as ``1``/``1.0`` are
+        already rejected as duplicates by ``__post_init__``, so this is
+        belt-and-braces, not a reachable branch)."""
+        table: dict = {}
+        for i, v in enumerate(self.values):
+            table.setdefault(v, i)
+        return table
+
+    @functools.cached_property
+    def _by_str(self) -> dict:
+        """str(value) -> value. First declaration wins on str collisions
+        (e.g. ``1`` vs ``"1"``), matching the original linear scan."""
+        table: dict = {}
+        for v in self.values:
+            table.setdefault(str(v), v)
+        return table
+
     def index_of(self, value: Value) -> int:
-        return self.values.index(value)
+        pos = self.position.get(value)
+        if pos is None:
+            # keep the canonical ValueError of the original list scan
+            return self.values.index(value)
+        return pos
+
+    def from_str(self, s: str) -> Value:
+        """The value whose ``str()`` is ``s`` (first match in declaration
+        order). Replaces the O(cardinality) scan ``config_from_id`` used to
+        do per serialized value — it is called per record on journal resume
+        and cache merge."""
+        try:
+            return self._by_str[s]
+        except KeyError:
+            raise KeyError(f"{s!r} not a value of {self.name!r}") from None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,382 @@
+"""Compiled-space parity and coverage (the ``core.space`` subsystem).
+
+Pins the compiled facade to the frozen pre-compilation implementation
+(``core.space.reference.ReferenceSearchSpace``) element-for-element AND
+rng-draw-for-draw: ``neighbors`` (both semantics), ``is_valid``,
+``random_config``, ``decode_batch``, ``nearest_valid`` (including the
+depth-3 BFS exhaustion -> random-restart fallback), plus the index-native
+row API (RowBatch, CSR degrees, id tables) and the empty-space error
+paths the strategies rely on.
+"""
+import math
+import pickle
+import random
+
+import numpy as np
+import pytest
+from _compat import given, settings, st
+
+from repro.core.budget import Budget, BudgetExhausted
+from repro.core.cache import CachedResult, CacheFile
+from repro.core.runner import SimulationRunner, run_fused
+from repro.core.searchspace import SearchSpace
+from repro.core.space import RowBatch
+from repro.core.space.reference import ReferenceSearchSpace
+from repro.core.tunable import Constraint, Tunable, tunables_from_dict
+
+# a small family of deterministic constraint shapes for the sweeps
+_CONSTRAINTS = (
+    None,
+    ("sum%3", lambda d: sum(v if isinstance(v, int) else 0
+                            for v in d.values()) % 3 != 0),
+    ("product", lambda d: _int_product(d) <= 64),
+    ("never", lambda d: False),
+)
+
+
+def _int_product(d):
+    out = 1
+    for v in d.values():
+        if isinstance(v, int):
+            out *= max(v, 1)
+    return out
+
+
+def _space_pair(seed: int):
+    """(facade, frozen reference) over the same random tunables/constraint."""
+    rng = random.Random(seed)
+    n_t = 2 + seed % 3
+    tun = []
+    for i in range(n_t):
+        card = 2 + rng.randrange(6)
+        if i == n_t - 1 and seed % 4 == 0:
+            values = tuple("abcdefgh"[:card])  # a string-valued tunable
+        else:
+            base = rng.randrange(4)
+            values = tuple(base + 2 * k for k in range(card))
+        tun.append(Tunable(f"t{i}", values))
+    name, fn = _CONSTRAINTS[seed % len(_CONSTRAINTS)] or ("none", None)
+    cons = (Constraint(fn, name),) if fn else ()
+    return (SearchSpace(tun, cons, name=f"sweep{seed}"),
+            ReferenceSearchSpace(tun, cons, name=f"sweep{seed}"))
+
+
+# ------------------------------------------------------------ parity sweeps
+# deterministic sweep (always runs) + hypothesis sweep (wider, when
+# installed): both drive the same element-identity assertions
+@pytest.mark.parametrize("seed", range(0, 24))
+def test_enumeration_and_neighbors_match_reference(seed):
+    _check_enumeration_parity(seed)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_property_enumeration_and_neighbors_match_reference(seed):
+    _check_enumeration_parity(seed)
+
+
+def _check_enumeration_parity(seed):
+    s, r = _space_pair(seed)
+    assert s.cartesian_size == r.cartesian_size
+    assert s.valid_configs == r.valid_configs
+    assert s.size == r.size
+    for c in r.valid_configs:
+        assert s.is_valid(c)
+        assert s.neighbors(c) == r.neighbors(c)
+        assert s.neighbors(c, strictly_adjacent=True) == \
+            r.neighbors(c, strictly_adjacent=True)
+    # invalid cartesian members agree too (bitmap vs constraint call)
+    probe = random.Random(seed)
+    for _ in range(20):
+        c = tuple(t.values[probe.randrange(t.cardinality)]
+                  for t in s.tunables)
+        assert s.is_valid(c) == r.is_valid(c)
+    assert not s.is_valid(("not-a-value",) * len(s.tunables))
+
+
+@pytest.mark.parametrize("seed", range(0, 24))
+def test_sampling_and_repair_draw_parity(seed):
+    _check_sampling_parity(seed)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_property_sampling_and_repair_draw_parity(seed):
+    _check_sampling_parity(seed)
+
+
+def _check_sampling_parity(seed):
+    """random_config / nearest_valid / decode_batch are value-identical AND
+    leave the rng in the identical state (fallback draws included)."""
+    s, r = _space_pair(seed)
+    if s.size == 0:
+        return  # sampling paths covered by the empty-space tests
+    rs, rr = random.Random(seed), random.Random(seed)
+    for _ in range(10):
+        assert s.random_config(rs) == r.random_config(rr)
+    assert rs.getstate() == rr.getstate()
+    probe = random.Random(~seed & 0xFFFF)
+    for _ in range(15):
+        c = tuple(t.values[probe.randrange(t.cardinality)]
+                  for t in s.tunables)
+        assert s.nearest_valid(c, rs) == r.nearest_valid(c, rr)
+        assert rs.getstate() == rr.getstate()
+    x = np.random.default_rng(seed).uniform(
+        -1.0, max(t.cardinality for t in s.tunables),
+        size=(12, len(s.tunables)))
+    assert s.decode_batch(x, rs) == r.decode_batch(x, rr)
+    assert rs.getstate() == rr.getstate()
+
+
+def test_from_indices_roundtrip_and_clamp_match_reference():
+    s, r = _space_pair(7)
+    for c in r.valid_configs:
+        assert s.from_indices(s.to_indices(c)) == c
+        assert np.array_equal(s.to_indices(c), r.to_indices(c))
+    assert s.from_indices([99.0] * len(s.tunables)) == \
+        r.from_indices([99.0] * len(s.tunables))
+    assert s.bounds == r.bounds
+
+
+# --------------------------------------------------- repair fallback / BFS
+def _far_space():
+    """Degenerate constraint: only the all-ones corner of a 6-bit cube is
+    valid, so the all-zeros corner is > 3 single moves away — the depth-3
+    BFS must exhaust and fall back to a random draw."""
+    tun = tunables_from_dict({f"b{i}": (0, 1) for i in range(6)})
+    cons = (Constraint(lambda d: all(v == 1 for v in d.values()),
+                       "all ones"),)
+    return (SearchSpace(tun, cons, name="far"),
+            ReferenceSearchSpace(tun, cons, name="far"))
+
+
+def test_repair_bfs_exhaustion_falls_back_to_random_draws():
+    s, r = _far_space()
+    bad = (0,) * 6
+    only = (1,) * 6
+    for seed in range(25):
+        rs, rr = random.Random(seed), random.Random(seed)
+        got = s.nearest_valid(bad, rs)
+        assert got == r.nearest_valid(bad, rr) == only
+        # the fallback consumed rng draws — and exactly the scalar ones
+        assert rs.getstate() == rr.getstate()
+        assert rs.getstate() != random.Random(seed).getstate()
+
+
+def test_repair_bfs_within_depth_is_deterministic_and_drawless():
+    s, r = _far_space()
+    near = (1, 1, 1, 0, 1, 1)  # one move away: BFS finds it, no rng use
+    rng = random.Random(0)
+    state0 = rng.getstate()
+    assert s.nearest_valid(near, rng) == (1,) * 6
+    assert rng.getstate() == state0
+    # memoized second call (including the negative BFS memo path)
+    assert s.nearest_valid(near, rng) == (1,) * 6
+    assert rng.getstate() == state0
+
+
+def test_out_of_vocab_repair_matches_reference():
+    s, r = _space_pair(5)
+    assert s.size > 0
+    oov = ("?!",) + tuple(t.values[0] for t in s.tunables[1:])
+    for seed in range(10):
+        rs, rr = random.Random(seed), random.Random(seed)
+        assert s.nearest_valid(oov, rs) == r.nearest_valid(oov, rr)
+        assert rs.getstate() == rr.getstate()
+
+
+# ------------------------------------------------------------- empty space
+def test_empty_space_errors():
+    tun = tunables_from_dict({"a": (1, 2), "b": (3, 4)})
+    s = SearchSpace(tun, (Constraint(lambda d: False, "never"),),
+                    name="void")
+    assert s.size == 0 and s.valid_configs == []
+    assert s.compiled.n_valid == 0
+    with pytest.raises(ValueError, match="no valid configs"):
+        s.random_config(random.Random(0))
+    with pytest.raises(ValueError, match="no valid configs"):
+        # an unrepairable config ends in the random fallback -> same error
+        s.nearest_valid((1, 3), random.Random(0))
+    stats = s.compiled.stats()
+    assert stats["n_valid"] == 0 and stats["valid_fraction"] == 0.0
+
+
+# ------------------------------------------------------- config ids / rows
+def test_config_from_id_uses_str_tables_and_first_match():
+    # 1 and "1" stringify identically; the original linear scan returned
+    # the first declared — the memoized table must too
+    t = Tunable("x", (1, "1", 2))
+    assert t.from_str("1") == 1 and isinstance(t.from_str("1"), int)
+    assert t.from_str("2") == 2
+    with pytest.raises(KeyError):
+        t.from_str("7")
+    s, r = _space_pair(11)
+    for c in r.valid_configs:
+        key = s.config_id(c)
+        assert key == r.config_id(c)
+        assert s.config_from_id(key) == r.config_from_id(key) == c
+
+
+def test_row_tables_and_rowbatch():
+    s, _ = _space_pair(12)
+    cs = s.compiled
+    assert len(cs.configs) == len(cs.ids) == len(cs.idx_tuples) == cs.n_valid
+    for row, cfg in enumerate(cs.configs):
+        assert cs.row_of_config(cfg) == row
+        assert cs.id_to_row[cs.ids[row]] == row
+        assert cs.rows_of_vidx([cs.idx_tuples[row]]).tolist() == [row]
+    rb = RowBatch(cs, range(min(5, cs.n_valid)))
+    assert len(rb) == min(5, cs.n_valid)
+    assert list(rb) == cs.configs[:len(rb)]
+    assert rb[0] == cs.configs[0]
+    sliced = rb[1:3]
+    assert isinstance(sliced, RowBatch) and list(sliced) == cs.configs[1:3]
+    # RowBatch pickles as the plain config list it denotes
+    assert pickle.loads(pickle.dumps(rb)) == list(rb)
+
+
+def test_csr_degrees_match_neighbor_lists():
+    s, r = _space_pair(13)
+    cs = s.compiled
+    for mode in (False, True):
+        indptr, indices = cs.csr(mode)
+        assert indptr[-1] == len(indices)
+        for row, cfg in enumerate(cs.configs):
+            assert (indptr[row + 1] - indptr[row]
+                    == len(r.neighbors(cfg, strictly_adjacent=mode)))
+    stats = cs.stats()
+    assert stats["cartesian_size"] == s.cartesian_size
+    assert stats["n_valid"] == s.size
+    assert stats["compile_seconds"] >= 0.0
+    for mode in ("strictly_adjacent", "hamming"):
+        deg = stats["degrees"][mode]
+        assert deg["min"] <= deg["median"] <= deg["max"]
+
+
+def test_space_pickles_without_compiled_arrays():
+    s, _ = _space_pair(16)  # constraint-free shape: Constraint fns of the
+    #                         sweep family are lambdas and cannot pickle
+    s.compiled  # force compilation
+    clone = pickle.loads(pickle.dumps(s))
+    assert clone._compiled is None  # recompiled lazily on the other side
+    assert clone.valid_configs == s.valid_configs
+    assert clone.compiled.n_valid == s.compiled.n_valid
+
+
+# ------------------------------------------------ runner row-path coverage
+def _cache(n_a: int = 12, n_b: int = 3) -> CacheFile:
+    space = SearchSpace(tunables_from_dict({"a": tuple(range(n_a)),
+                                            "b": tuple(range(n_b))}),
+                        name="rows")
+    results = {}
+    for i, cfg in enumerate(space.valid_configs):
+        key = space.config_id(cfg)
+        if i % 7 == 2:
+            results[key] = CachedResult("error", math.inf, (), 0.3, 0.01)
+        else:
+            v = 1e-3 * (1 + ((i * 13) % 29))
+            results[key] = CachedResult("ok", v, (v,) * 2, 0.2, 0.01)
+    return CacheFile("rows", "synth", space, results)
+
+
+def _observable(runner):
+    return (runner.trace, runner.fresh_evals, runner.budget.spent_seconds,
+            runner.budget.spent_evals, sorted(runner.memo))
+
+
+@pytest.mark.parametrize("budget_kw", [{"max_seconds": 1e9},
+                                       {"max_evals": 17},
+                                       {"max_seconds": 4.0}],
+                         ids=["unbounded", "evals", "seconds"])
+def test_rowbatch_run_matches_scalar_loop(budget_kw):
+    cache = _cache()
+    cs = cache.space.compiled
+    rows = list(range(cs.n_valid)) * 2  # revisits included
+    vec = SimulationRunner(cache, Budget(**budget_kw), columnar=True)
+    sca = SimulationRunner(cache, Budget(**budget_kw), columnar=False)
+    err_v = err_s = False
+    try:
+        vec.run_batch(RowBatch(cs, rows))
+    except BudgetExhausted:
+        err_v = True
+    try:
+        for r in rows:
+            sca.run(cs.configs[r])
+    except BudgetExhausted:
+        err_s = True
+    assert err_v == err_s
+    assert _observable(vec) == _observable(sca)
+
+
+def test_rowbatch_unrecorded_row_takes_imputed_miss_path():
+    cache = _cache()
+    victims = list(cache.results)[::4]
+    for key in victims:
+        del cache.results[key]
+    cache.invalidate_columns()
+    cs = cache.space.compiled
+    rows = list(range(cs.n_valid))
+    vec = SimulationRunner(cache, Budget(max_seconds=1e9), columnar=True)
+    sca = SimulationRunner(cache, Budget(max_seconds=1e9), columnar=False)
+    obs_v = vec.run_batch(RowBatch(cs, rows))
+    obs_s = [sca.run(cs.configs[r]) for r in rows]
+    assert obs_v == obs_s
+    assert _observable(vec) == _observable(sca)
+    assert any(o.charge_s == cache.mean_eval_charge() for o in obs_v)
+
+
+def test_rowbatch_mixed_with_keyed_calls_stays_coherent():
+    cache = _cache()
+    cs = cache.space.compiled
+    vec = SimulationRunner(cache, Budget(max_seconds=1e9), columnar=True)
+    sca = SimulationRunner(cache, Budget(max_seconds=1e9), columnar=False)
+    vec.run(cs.configs[5])                      # keyed scalar call
+    sca.run(cs.configs[5])
+    vec.run_batch(RowBatch(cs, [5, 6, 7]))      # row path sees the memo hit
+    for r in (5, 6, 7):
+        sca.run(cs.configs[r])
+    vec.run_batch(cs.configs[:4])               # keyed batch path
+    for c in cs.configs[:4]:
+        sca.run(c)
+    vec.run_batch(RowBatch(cs, range(cs.n_valid)))  # vectorized row commit
+    for c in cs.configs:
+        sca.run(c)
+    assert _observable(vec) == _observable(sca)
+
+
+def test_run_fused_rowbatch_parity():
+    cache = _cache()
+    cs = cache.space.compiled
+    total = sum(r.charge_s for r in cache.results.values())
+    batches, refs = [], []
+    for i, sl in enumerate((slice(0, 20), slice(10, 36),
+                            slice(0, cs.n_valid))):
+        batches.append((SimulationRunner(cache,
+                                         Budget(max_seconds=total * 0.2
+                                                * (i + 1))),
+                        RowBatch(cs, range(cs.n_valid)[sl])))
+        refs.append(SimulationRunner(cache,
+                                     Budget(max_seconds=total * 0.2
+                                            * (i + 1)),
+                                     columnar=False))
+    results = run_fused(batches)
+    for (runner, rb), ref, res in zip(batches, refs, results):
+        try:
+            expected = [ref.run(c) for c in rb]
+        except BudgetExhausted as e:
+            assert isinstance(res, BudgetExhausted)
+            assert str(res) == str(e)
+        else:
+            assert res == expected
+        assert _observable(runner) == _observable(ref)
+
+
+def test_rows_for_space_maps_cache_columns():
+    cache = _cache()
+    cs = cache.space.compiled
+    cols = cache.columns
+    col_of_row = cols.rows_for_space(cs)
+    assert len(col_of_row) == cs.n_valid
+    for row, key in enumerate(cs.ids):
+        assert col_of_row[row] == cols.index.get(key, -1)
+    assert cols.rows_for_space(cs) is col_of_row  # memoized per view
