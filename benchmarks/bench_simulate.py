@@ -32,6 +32,15 @@ on. Components:
                    lists over the whole space. This is the one-time cost a
                    campaign pays per (space, process); the scalar side
                    used to pay it lazily, spread over every first visit.
+  jax_replay       fused fresh-replay through the jitted jax engine
+                   (``core.engine_jax.replay_many``): R concurrent runs'
+                   full-space row permutations resolved in one vmapped
+                   device dispatch vs the same workload through the numpy
+                   engine's chunked row commits. Parity (accept masks,
+                   trace times/values, final spends) is asserted outside
+                   the timed region; the jit compile is warmed outside it
+                   too. Skipped (not failed) when no jax backend can
+                   dispatch — the committed baseline is recorded with one.
   local_search     neighborhood-heavy local search (greedy ILS + MLS over
                    Hamming neighborhoods) as 25-repeat fused grids: the
                    recorded per-round ask streams — whole neighborhoods as
@@ -76,7 +85,8 @@ from repro.core.tunable import tunables_from_dict
 from .common import FAST
 
 BENCH_FORMAT = "repro-bench-simulate"
-BENCH_VERSION = 3  # v3: space_compile + local_search (compiled spaces)
+BENCH_VERSION = 4  # v4: jax_replay (jitted engine); v3: space_compile +
+#                         local_search (compiled spaces)
 
 # the campaign component's hyperparameter set: a slice of the Table III
 # grids, small enough for CI, population-shaped so the batch step is on
@@ -518,6 +528,76 @@ def bench_local_search(caches: "list[CacheFile]") -> dict:
                       sa_n_evals=sa_evals)
 
 
+JAX_REPLAY_RUNS = 64  # concurrent runs in the fused vmapped dispatch
+
+
+def bench_jax_replay(cache: CacheFile) -> dict:
+    """Fused fresh-replay on the jitted jax engine vs the numpy engine.
+
+    ``JAX_REPLAY_RUNS`` independent full-space row permutations resolve as
+    one ``replay_many`` dispatch (gathers + per-run budget scans, vmapped);
+    the numpy side replays the identical workload through each runner's
+    chunked whole-array row commits. Both sides are pure fresh replay
+    (unlimited budget) — the throughput claim ``engine_jax`` makes. The
+    ``speedup`` ratio is measured same-host/same-process like every other
+    component, so the CI floor transfers across runner silicon.
+    """
+    from repro.core import engine_jax
+    from repro.core.space import RowBatch
+    if not engine_jax.engine_available():
+        return {"skipped": True,
+                "reason": engine_jax.unavailable_reason()}
+    import jax
+
+    compiled = cache.space.compiled
+    cols = cache.columns
+    n = compiled.n_valid
+    rng = np.random.default_rng(0)
+    rows = np.stack([rng.permutation(n)
+                     for _ in range(JAX_REPLAY_RUNS)]).astype(np.int64)
+    n_evals = JAX_REPLAY_RUNS * n
+    tables = engine_jax.replay_tables(cols, compiled)
+
+    def jax_side():
+        out = engine_jax.replay_many(cols, compiled, rows, tables=tables)
+        jax.block_until_ready(out)
+        return out
+
+    def numpy_side():
+        runners = []
+        for r in range(JAX_REPLAY_RUNS):
+            runner = SimulationRunner(cache,
+                                      Budget(max_seconds=float("inf")))
+            runner.run_batch(RowBatch(compiled, rows[r]))
+            runners.append(runner)
+        return runners
+
+    # parity outside the timed region: every run's committed trace and
+    # final spend must match the device arrays bit-for-bit
+    out = jax_side()  # also warms the jit compile
+    accept, t_after, value, _c, spent, evals, _x = (np.asarray(o)
+                                                    for o in out)
+    for r, runner in enumerate(numpy_side()):
+        assert accept[r].all() and runner.budget.spent_evals == evals[r]
+        assert runner.budget.spent_seconds == spent[r], \
+            "jax_replay parity violation: spends diverged"
+        trace_t = np.fromiter((t for t, _v, _cfg in runner.trace),
+                              dtype=np.float64, count=n)
+        trace_v = np.fromiter((v for _t, v, _cfg in runner.trace),
+                              dtype=np.float64, count=n)
+        assert np.array_equal(trace_t, t_after[r]) \
+            and np.array_equal(trace_v, value[r]), \
+            "jax_replay parity violation: traces diverged"
+
+    w_jax, w_np = _best_pair(jax_side, numpy_side)
+    return _component(w_jax, w_np,
+                      evals_per_sec=n_evals / w_jax,
+                      evals_per_sec_scalar=n_evals / w_np,
+                      n_evals=n_evals, n_runs=JAX_REPLAY_RUNS,
+                      reference="numpy",
+                      backend=engine_jax.backend_name())
+
+
 def run_bench() -> dict:
     hub = _hub_caches()
     big = hub[0]  # gemm@tpu_v5e: the largest hub space
@@ -537,6 +617,7 @@ def run_bench() -> dict:
             "local_search": {"repeats": DRIVE_MANY_REPEATS,
                              "strategies": [f"{s}:{sorted(hp.items())}"
                                             for s, hp in LOCAL_SEARCH_SET]},
+            "jax_replay": {"runs": JAX_REPLAY_RUNS},
         },
         "components": {
             "replay_fresh": fresh_c,
@@ -547,13 +628,15 @@ def run_bench() -> dict:
             "drive_many": bench_drive_many(hub),
             "space_compile": bench_space_compile(hub),
             "local_search": bench_local_search(hub),
+            "jax_replay": bench_jax_replay(big),
         },
     }
     comp = report["components"]
     report["score_checksum"] = comp["campaign"]["score_checksum"]
     report["evals_per_sec"] = comp["replay_fresh"]["evals_per_sec"]
     # headline: geometric mean of the per-component engine speedups
-    speedups = [c["speedup"] for c in comp.values()]
+    # (skipped components — jax_replay without a backend — stay out)
+    speedups = [c["speedup"] for c in comp.values() if "speedup" in c]
     report["speedup_geomean"] = float(np.exp(np.mean(np.log(speedups))))
     return report
 
@@ -564,6 +647,9 @@ def main(json_out: str | None = None) -> dict:
     print(f"{'component':16s} "
           f"{'vectorized':>12s} {'scalar':>12s} {'speedup':>8s}")
     for name, c in comp.items():
+        if c.get("skipped"):
+            print(f"{name:16s} skipped ({c.get('reason', 'unavailable')})")
+            continue
         print(f"{name:16s} {c['wall_s']*1e3:10.1f}ms {c['wall_s_scalar']*1e3:10.1f}ms "
               f"{c['speedup']:7.2f}x")
     print(f"replay throughput: {comp['replay_fresh']['evals_per_sec']:,.0f} "

@@ -49,8 +49,12 @@ MIN_SPEEDUP = 0.9
 # itself, which is an order of magnitude faster than the scalar lazy
 # build (committed baseline ~20x; the floor leaves room for slower
 # constraint-bound hosts).
+# jax_replay pins the jitted engine's headline claim: fused fresh-replay
+# through one vmapped device dispatch is ≥10x the numpy engine's chunked
+# row commits on the same workload (committed baseline shows well above;
+# the hard floor *is* the claim — see docs/performance.md).
 COMPONENT_MIN = {"drive_many": 1.8, "local_search": 2.0,
-                 "space_compile": 5.0}
+                 "space_compile": 5.0, "jax_replay": 10.0}
 
 
 def _unusable(msg: str) -> SystemExit:
@@ -95,6 +99,11 @@ def compare(baseline: dict, current: dict, threshold: float) -> list[str]:
         if cur_c is None:
             failures.append(f"component {name!r} missing from current run")
             continue
+        if cur_c.get("skipped") or base_c.get("skipped"):
+            # optional-backend components (jax_replay) skip — with a
+            # recorded reason — on runners that cannot dispatch them;
+            # a skip is not a regression
+            continue
         # relative floor, but never below MIN_SPEEDUP (or the component's
         # own hard floor): for components whose baseline ratio is close to
         # 1x (campaign), a purely relative tolerance would wave through a
@@ -127,7 +136,7 @@ def main(argv=None) -> int:
     for name in baseline["components"]:
         b = baseline["components"][name]
         c = current["components"].get(name, {})
-        print(f"  {name:16s} speedup {b['speedup']:6.2f}x -> "
+        print(f"  {name:16s} speedup {b.get('speedup', float('nan')):6.2f}x -> "
               f"{c.get('speedup', float('nan')):6.2f}x")
     if failures:
         print("\nBENCH GATE FAILED:", file=sys.stderr)

@@ -57,12 +57,15 @@ def _add_space_args(p: argparse.ArgumentParser) -> None:
                    help="comma-separated hub devices (overrides --split)")
     g.add_argument("--hub-root", default=None,
                    help="hub directory (default: the bundled hub path)")
-    g.add_argument("--engine", choices=("vectorized", "scalar"),
+    g.add_argument("--engine", choices=("vectorized", "scalar", "jax"),
                    default="vectorized",
                    help="simulation engine: 'vectorized' resolves lookups "
                         "and scoring through columnar numpy arrays; "
-                        "'scalar' is the per-evaluation reference path. "
-                        "Scores are bit-identical either way (see "
+                        "'scalar' is the per-evaluation reference path; "
+                        "'jax' replays row batches through the jitted "
+                        "device kernel (falls back to 'vectorized' when no "
+                        "jax backend is importable). Scores are "
+                        "bit-identical across all three (see "
                         "docs/performance.md)")
 
 

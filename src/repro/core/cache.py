@@ -151,7 +151,7 @@ class CacheColumns:
 
     __slots__ = ("keys", "index", "records", "time_s", "charge_s",
                  "time_list", "charge_list", "_mean_charge", "_detail",
-                 "_space_rows")
+                 "_space_rows", "_jax")
 
     def __init__(self, results: Mapping[str, CachedResult]):
         self.keys = tuple(results.keys())
@@ -171,6 +171,22 @@ class CacheColumns:
         # invalidation triggers a rebuild of this object
         self._detail: tuple | None = None
         self._space_rows: tuple | None = None  # (compiled, row map) memo
+        # device-array mirror (core.engine_jax.ReplayTables), never pickled
+        self._jax: tuple | None = None
+
+    def __getstate__(self) -> dict:
+        """Columns rarely pickle (``CacheFile`` drops them), but when they
+        do, the space-keyed memos stay behind: ``_space_rows`` drags a
+        whole ``CompiledSpace`` along and ``_jax`` holds device arrays
+        that must not cross process boundaries."""
+        return {k: getattr(self, k) for k in self.__slots__
+                if k not in ("_space_rows", "_jax")}
+
+    def __setstate__(self, state: dict) -> None:
+        for k, v in state.items():
+            setattr(self, k, v)
+        self._space_rows = None
+        self._jax = None
 
     def __len__(self) -> int:
         return len(self.keys)

@@ -414,7 +414,8 @@ class SearchDriver:
 
 
 # ---------------------------------------------------------------- drive_many
-def drive_many(drivers: Sequence[SearchDriver]) -> list[Observation | None]:
+def drive_many(drivers: Sequence[SearchDriver],
+               engine: "str | None" = None) -> list[Observation | None]:
     """Interleave N tuning runs, fusing concurrent asks into shared batch
     resolutions (``runner.run_fused``) against the columnar engine.
 
@@ -424,7 +425,24 @@ def drive_many(drivers: Sequence[SearchDriver]) -> list[Observation | None]:
     each run to completion on its own: runs share no mutable state beyond
     the (memoized, value-identical) space caches, and ``run_fused``
     preserves per-runner evaluation order exactly.
+
+    ``engine`` overrides the row-resolution engine of every participating
+    ``SimulationRunner`` for the drive (``"numpy"``/``"scalar"``/``"jax"``
+    — see ``SimulationRunner``); observable per-run state is engine-
+    independent because the jax replay path is bit-identical to numpy.
     """
+    if engine is not None:
+        from .runner import SimulationRunner
+        if engine == "vectorized":
+            engine = "numpy"
+        if engine not in SimulationRunner.ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; expected one of "
+                             f"{SimulationRunner.ENGINES}")
+        for d in drivers:
+            r = d.runner
+            if isinstance(r, SimulationRunner):
+                r.engine = engine
+                r.columnar = engine != "scalar"
     active = [d for d in drivers if not d.state.finished]
     try:
         while active:

@@ -1,0 +1,72 @@
+"""Device-resident mirrors of the compiled space and cache columns.
+
+The numpy arrays stay the source of truth; these are one-time ``device_put``
+copies memoized on their host objects (``CacheColumns._jax``,
+``CompiledSpace._jax``) with the same single-entry protocol as
+``CacheColumns.rows_for_space``. They are never pickled: both hosts drop
+the memo in ``__getstate__``/``__reduce__`` paths, so a process-pool worker
+rebuilds its tables against whatever backend it actually has
+(tests/test_parallel.py pins this).
+
+All float tables are created under ``enable_x64`` — jax's default float32
+would silently truncate the cache's float64 charge/time columns and break
+the bit-parity contract (the ``JAX_ENABLE_X64`` CI row guards the other
+direction: the suite must also pass when x64 is on globally).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+
+class ReplayTables:
+    """Replay-from-log tables for one (CacheColumns, CompiledSpace) pair:
+    the space-row -> cache-row bridge plus the value/charge columns."""
+
+    __slots__ = ("n_valid", "col_of_row", "time_s", "charge_s", "has_miss")
+
+    def __init__(self, cols, compiled):
+        col_map = cols.rows_for_space(compiled)
+        with enable_x64():
+            self.col_of_row = jnp.asarray(col_map, dtype=jnp.int32)
+            self.time_s = jnp.asarray(cols.time_s)      # float64
+            self.charge_s = jnp.asarray(cols.charge_s)  # float64
+        self.n_valid = int(compiled.n_valid)
+        self.has_miss = bool((col_map < 0).any()) if len(col_map) else False
+
+
+class SpaceTables:
+    """Free-running tables for one ``CompiledSpace``: the value-index
+    matrix, validity lookup, and strides (device-side decode/repair)."""
+
+    __slots__ = ("n_valid", "n_tunables", "cards", "vidx", "row_of_flat",
+                 "strides", "x_hi")
+
+    def __init__(self, compiled):
+        with enable_x64():
+            self.vidx = jnp.asarray(compiled.vidx, dtype=jnp.int32)
+            self.row_of_flat = jnp.asarray(compiled.row_of_flat)
+            self.strides = jnp.asarray(compiled.strides_np)
+            self.x_hi = jnp.asarray(compiled._x_hi)
+        self.n_valid = int(compiled.n_valid)
+        self.n_tunables = int(compiled.n_tunables)
+        self.cards = tuple(compiled.cards)
+
+
+def replay_tables(cols, compiled) -> ReplayTables:
+    """Memoized ``ReplayTables`` (single-entry, keyed by compiled-space
+    identity — like ``CacheColumns.rows_for_space``)."""
+    memo = cols._jax
+    if memo is not None and memo[0] is compiled:
+        return memo[1]
+    tables = ReplayTables(cols, compiled)
+    cols._jax = (compiled, tables)
+    return tables
+
+
+def space_tables(compiled) -> SpaceTables:
+    """Memoized ``SpaceTables`` on the compiled space itself."""
+    tables = compiled._jax
+    if tables is None:
+        tables = compiled._jax = SpaceTables(compiled)
+    return tables

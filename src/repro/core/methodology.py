@@ -38,7 +38,7 @@ DEFAULT_SAMPLES = 50
 BASELINE_RUNS = 1000
 BASELINE_SEED = 0xB0B
 HARD_TIME_CAP_EVALS = 3000  # tractability cap: budget ≤ cap × mean_charge
-ENGINES = ("vectorized", "scalar")
+ENGINES = ("vectorized", "scalar", "jax")
 # Baseline vectorization: batching virtual runs into (block, |space|)
 # matrices beats the per-run loop only while the block's working set stays
 # cache-resident — for large spaces the per-run arrays already amortize the
@@ -55,10 +55,12 @@ class SpaceScorer:
 
     ``engine`` selects between the array-backed fast path (``"vectorized"``,
     the default: batched baseline construction, ``np.searchsorted`` curve
-    sampling, columnar ``SimulationRunner``) and the original per-evaluation
-    ``"scalar"`` path. Both produce bit-identical scores — the scalar path
-    is kept as the parity reference and the regression benchmark's
-    denominator, not as a fallback.
+    sampling, columnar ``SimulationRunner``), the original per-evaluation
+    ``"scalar"`` path, and the jitted ``"jax"`` replay path (device-resident
+    row resolution; scoring/baselines stay the vectorized numpy code). All
+    three produce bit-identical scores — the scalar path is kept as the
+    parity reference and the regression benchmark's denominator, not as a
+    fallback (see ``core.engine_jax`` for the jax parity contract).
     """
 
     cache: CacheFile
@@ -108,7 +110,7 @@ class SpaceScorer:
         improvement times — bit-identical to the scalar loop (same float64
         arithmetic per sample).
         """
-        if self.engine != "vectorized":
+        if self.engine == "scalar":
             return self._score_trace_scalar(trace, times, baseline)
         if baseline is None:
             baseline = self.baseline_at_time(times)
@@ -256,7 +258,7 @@ def make_scorer(cache: CacheFile, cutoff: float = DEFAULT_CUTOFF,
                 engine: str = "vectorized") -> SpaceScorer:
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; known: {ENGINES}")
-    if engine == "vectorized":
+    if engine != "scalar":
         # columnar view: same contents, same insertion order as the scalar
         # comprehension below, built once and shared with the runners
         cols = cache.columns
@@ -337,7 +339,7 @@ def run_repeat(scorer: SpaceScorer, make_strategy: Callable[[], Strategy],
     rng = _repeat_rng(scorer, repeat, seed)
     runner = SimulationRunner(scorer.cache,
                               Budget(max_seconds=scorer.budget_s),
-                              columnar=scorer.engine == "vectorized")
+                              engine=scorer.engine)
     strategy = make_strategy()
     strategy.run(scorer.cache.space, runner, rng)
     return RepeatResult(scorer.score_trace(runner.trace, times, baseline),
@@ -379,7 +381,7 @@ def run_repeats_fused(scorer: SpaceScorer,
                                baseline) for rr in range(repeats)]
         runner = SimulationRunner(scorer.cache,
                                   Budget(max_seconds=scorer.budget_s),
-                                  columnar=True)
+                                  engine=scorer.engine)
         driver = SearchDriver(strategy, scorer.cache.space, runner,
                               _repeat_rng(scorer, r, seed))
         if r == 0 and isinstance(driver.state, ThreadBridgeState):
@@ -450,7 +452,7 @@ def evaluate_strategy(make_strategy: Callable[[], Strategy],
             cells[i] = res
     else:
         for si, scorer in enumerate(scorers):
-            if drive != "sequential" and scorer.engine == "vectorized":
+            if drive != "sequential" and scorer.engine != "scalar":
                 cells[si * repeats:(si + 1) * repeats] = run_repeats_fused(
                     scorer, make_strategy, repeats, seed, times[si],
                     baselines[si])

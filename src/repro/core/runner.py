@@ -206,13 +206,45 @@ class SimulationRunner(Runner):
     the parity suite and the regression benchmark compare against. Both
     paths are bit-identical by construction (the columns are built with the
     scalar path's own fixed-order reductions).
+
+    ``engine`` names the row-resolution backend explicitly: ``"numpy"``
+    (alias ``"vectorized"``; == ``columnar=True``), ``"scalar"``
+    (== ``columnar=False``), or ``"jax"`` — the jitted device path of
+    ``core.engine_jax``, whose replay-from-log commits are bit-identical to
+    the numpy engine (tests/test_engine_jax.py). When jax or a usable
+    backend is missing, ``"jax"`` degrades to the numpy path transparently
+    — safe precisely because the two are bit-identical, so a process-pool
+    worker without an accelerator produces the same campaign.
     """
 
+    ENGINES = ("numpy", "scalar", "jax")
+
     def __init__(self, cache: CacheFile, budget: Budget,
-                 columnar: bool = True):
+                 columnar: bool = True, engine: "str | None" = None):
+        if engine is None:
+            engine = "numpy" if columnar else "scalar"
+        elif engine == "vectorized":
+            engine = "numpy"
+        if engine not in self.ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"expected one of {self.ENGINES}")
         super().__init__(cache.space, budget)
         self.cache = cache
-        self.columnar = columnar
+        self.columnar = engine != "scalar"
+        self.engine = engine
+        self._jax_eng: object = None  # lazy ReplayEngine / False once probed
+
+    def _jax_engine(self):
+        """The bound ``engine_jax.ReplayEngine``, or None when jax cannot
+        dispatch (import failure, no backend) — callers then fall through
+        to the bit-identical numpy path."""
+        eng = self._jax_eng
+        if eng is None:
+            from . import engine_jax
+            eng = self._jax_eng = (engine_jax.ReplayEngine(self)
+                                   if engine_jax.engine_available()
+                                   else False)
+        return eng or None
 
     def _evaluate(self, config: Config) -> CachedResult:
         try:
@@ -293,6 +325,13 @@ class SimulationRunner(Runner):
         n = len(rows)
         if n == 0:
             return []
+        if self.engine == "jax":
+            eng = self._jax_engine()
+            if eng is not None:
+                # every batch with a fresh row dispatches on the device
+                # (single rows included — uniform coverage for the parity
+                # suite); fully-memoized batches short-circuit inside
+                return eng.commit_rows(rows)
         if n == 1:
             # the single-move shape (simulated annealing, basin hopping,
             # the thread bridge): skip every batch prologue

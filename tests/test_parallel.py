@@ -64,6 +64,49 @@ def test_parallel_evaluate_strategy_bit_identical():
     assert serial.per_space_score == par.per_space_score
 
 
+def test_jax_device_arrays_never_pickle():
+    """The jax engine memoizes device-array mirrors on ``CacheColumns`` and
+    ``CompiledSpace`` (``_jax``); a pool worker must re-materialize them
+    against its own backend (or fall back to numpy), never inherit device
+    handles — so pickles drop them, even mid-campaign."""
+    import pickle
+
+    from repro.core.budget import Budget
+    from repro.core.runner import SimulationRunner
+    from repro.core.space import RowBatch
+
+    cache = _cache(3)
+    runner = SimulationRunner(cache, Budget(max_evals=30), engine="jax")
+    # populate the device-table memos (a no-op without a jax backend —
+    # the pickle contract must hold either way)
+    runner.run_batch(RowBatch(cache.space.compiled,
+                              np.arange(20, dtype=np.int64)))
+    cols, cs = cache.columns, cache.space.compiled
+    assert pickle.loads(pickle.dumps(cols))._jax is None
+    assert pickle.loads(pickle.dumps(cs))._jax is None
+    for payload in (pickle.dumps(cols), pickle.dumps(cs),
+                    pickle.dumps(cache)):
+        # no jax/jaxlib types smuggled in (the ``_jax`` attribute *name*
+        # legitimately appears; module references must not)
+        assert b"jaxlib" not in payload
+        assert b"jax._src" not in payload
+        assert b"ArrayImpl" not in payload
+
+
+def test_parallel_jax_scorers_bit_identical_to_serial():
+    """engine="jax" scorers fan out to process workers: each worker
+    re-probes its own backend (using it when present, numpy otherwise) and
+    the campaign is bit-identical to the serial run regardless."""
+    scorers = [make_scorer(_cache(), engine="jax")]
+    factory = StrategyFactory.create("genetic_algorithm", {})
+    serial = evaluate_strategy(factory, scorers, repeats=2, seed=0)
+    with CampaignExecutor(workers=2, backend="process") as ex:
+        par = evaluate_strategy(factory, scorers, repeats=2, seed=0,
+                                executor=ex)
+    assert serial.score == par.score
+    assert np.array_equal(serial.curve, par.curve)
+
+
 # ----------------------------------------------------------- journal resume
 def test_interrupted_campaign_resumes_without_rescoring(tmp_path, monkeypatch):
     scorers = [make_scorer(_cache())]

@@ -155,6 +155,40 @@ def test_state_pickle_roundtrip_mid_run(name):
     assert observable(fresh) == observable(ref)
 
 
+@pytest.mark.parametrize("name", ("genetic_algorithm", "pso",
+                                  "simulated_annealing"))
+@pytest.mark.parametrize("engines", [("jax", "numpy"), ("numpy", "jax")],
+                         ids=["jax-to-numpy", "numpy-to-jax"])
+def test_cross_engine_pickle_resume(name, engines):
+    """A snapshot taken mid-run under one engine resumes bit-identically
+    under the other: replay-from-log is engine-invariant, so suspended
+    state carries no engine fingerprint. Runs everywhere — without a jax
+    backend ``engine="jax"`` degrades to the numpy path, which is exactly
+    the property being pinned."""
+    eng_a, eng_b = engines
+    budget_kw = {"max_evals": 48}
+    ref = _runner(**budget_kw)  # engine-free reference completion
+    get_strategy(name).run(CACHE.space, ref, random.Random(9))
+
+    part = SimulationRunner(CACHE, Budget(**budget_kw), engine=eng_a)
+    driver = SearchDriver(get_strategy(name), CACHE.space, part,
+                          random.Random(9))
+    payload = None
+    for _ in range(3):
+        if not driver.step():
+            break
+        payload = pickle.dumps(driver.snapshot())
+    driver.state.close()
+    if payload is None:
+        pytest.skip(f"{name} finishes in one generation at this budget")
+
+    fresh = SimulationRunner(CACHE, Budget(**budget_kw), engine=eng_b)
+    resumed = SearchDriver.resume(get_strategy(name), CACHE.space, fresh,
+                                  pickle.loads(payload))
+    resumed.run()
+    assert observable(fresh) == observable(ref)
+
+
 def test_pickled_state_drops_space_and_runtime():
     strat = get_strategy("simulated_annealing")
     runner = _runner(max_evals=12)
