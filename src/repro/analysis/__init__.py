@@ -1,0 +1,41 @@
+"""parity-lint: static analysis for the repo's determinism contracts.
+
+The simulation mode is only trustworthy because replayed runs are
+bit-identical to recorded ones, and the whole house style enforces that
+with *runtime* oracles — trace fixtures, engine-parity suites, the bench
+score checksum. This package encodes the same contracts as AST rules so a
+hazard is caught when it is written, not when a fixture happens to
+exercise it:
+
+  * RNG discipline (``rules/rng.py``) — no module-level/time-seeded
+    draws in core/, no draws ordered by set iteration;
+  * pickle safety (``rules/pickle_safety.py``) — device/columnar mirror
+    caches are dropped from pickles; SearchStates stay host-only;
+  * f64 budget discipline (``rules/f64.py``) — no parallel scans, no
+    float32, explicit reduction dtypes in ``core/engine_jax/``;
+  * ask/tell conformance (``rules/protocol.py``) — strategies never call
+    the runner; states don't retain runtime across snapshots;
+  * ordering (``rules/ordering.py``) — sorted directory enumeration, no
+    set-ordered iteration in core/.
+
+Entry points: ``python -m repro lint`` (CI gate), ``repro.api.lint``
+(programmatic), ``run_source`` (fixture tests). Deliberate findings live
+in the checked-in baseline (``parity-lint-baseline.json``); per-line
+escapes use ``# parity-lint: disable=<rule>`` and unused escapes are
+themselves findings. docs/static-analysis.md is the rule catalogue.
+"""
+from __future__ import annotations
+
+from .core import (ERROR, SYNTAX_ERROR, UNUSED_SUPPRESSION, WARNING,
+                   Finding, LintResult, Rule, lint_paths, lint_source,
+                   run_source)
+
+__all__ = ["Finding", "LintResult", "Rule", "lint_paths", "lint_source",
+           "run_source", "default_rules", "ERROR", "WARNING",
+           "SYNTAX_ERROR", "UNUSED_SUPPRESSION"]
+
+
+def default_rules() -> list[Rule]:
+    """Fresh instances of every registered rule."""
+    from .rules import ALL_RULES
+    return [cls() for cls in ALL_RULES]

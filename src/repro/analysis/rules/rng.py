@@ -1,0 +1,172 @@
+"""RNG discipline rules.
+
+The bit-parity contract (docs/architecture.md, "RNG parity contract")
+requires every random draw in the simulation core to come from the run's
+explicitly-seeded ``random.Random``/``np.random.Generator`` in a
+deterministic order. Three ways code breaks that statically:
+
+  * drawing from the *module-level* global RNG (``np.random.shuffle``,
+    ``random.random``) — shared mutable state whose stream depends on
+    whatever else ran in the process;
+  * seeding an RNG from wall-clock time / OS entropy — different stream
+    every run;
+  * drawing inside iteration over a set — per-process hash order decides
+    the draw order, so two bit-identical states diverge.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import (ERROR, Rule, call_name, dotted, enclosing, is_set_expr,
+                    parent)
+
+# np.random attributes that construct explicitly-seeded objects rather
+# than drawing from the module-level global state
+_NP_CONSTRUCTORS = frozenset({
+    "default_rng", "Generator", "RandomState", "SeedSequence",
+    "BitGenerator", "Philox", "PCG64", "PCG64DXSM", "MT19937", "SFC64",
+})
+
+# stdlib ``random`` module-level draw/seed functions (random.Random and
+# the class names are constructors, fine when explicitly seeded)
+_PY_MODULE_DRAWS = frozenset({
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "shuffle", "sample", "seed", "getrandbits", "gauss", "normalvariate",
+    "betavariate", "expovariate", "triangular", "vonmisesvariate",
+    "paretovariate", "weibullvariate", "lognormvariate", "randbytes",
+})
+
+# draw methods on rng-like receivers (random.Random + np Generator)
+_RNG_METHODS = frozenset(_PY_MODULE_DRAWS - {"seed"} | {
+    "integers", "standard_normal", "normal", "permutation", "permuted",
+    "bytes", "exponential",
+})
+
+_RNG_RECEIVERS = ("rng", "np_rng", "rnd", "rand", "random_state")
+
+_TIME_SOURCES = frozenset({
+    "time.time", "time.time_ns", "time.monotonic", "time.perf_counter",
+    "os.urandom", "uuid.uuid4", "secrets.token_bytes", "secrets.randbits",
+})
+
+
+def _is_rng_receiver(recv: ast.AST) -> bool:
+    name = dotted(recv)
+    if name is None:
+        return False
+    last = name.rsplit(".", 1)[-1]
+    return last in _RNG_RECEIVERS or last.endswith("_rng")
+
+
+class ModuleLevelDraw(Rule):
+    name = "rng-module-draw"
+    severity = ERROR
+    scope = ("core/",)
+    invariant = ("core/ draws only from per-run seeded RNG objects, never "
+                 "the np.random / random module-level global state")
+    oracle = ("trace fixtures + frozen legacy loops "
+              "(tests/test_protocol.py) and the bench score checksum")
+
+    def visit_Call(self, ctx, node):
+        name = call_name(node)
+        if name is None:
+            return
+        parts = name.split(".")
+        if parts[0] in ("np", "numpy") and len(parts) >= 3 \
+                and parts[1] == "random" \
+                and parts[2] not in _NP_CONSTRUCTORS:
+            yield self.finding(
+                ctx, node,
+                f"module-level draw {name}() uses numpy's global RNG; "
+                f"draw from the run's np.random.Generator instead")
+        elif parts[0] == "random" and len(parts) == 2 \
+                and parts[1] in _PY_MODULE_DRAWS:
+            yield self.finding(
+                ctx, node,
+                f"module-level draw {name}() uses the shared global RNG; "
+                f"draw from the run's random.Random instance instead")
+
+
+class TimeSeededRng(Rule):
+    name = "rng-time-seed"
+    severity = ERROR
+    scope = ()
+    invariant = ("RNGs are seeded from explicit integers derived from "
+                 "(seed, space, repeat), never wall clock or OS entropy")
+    oracle = ("bit-identical parallel campaigns "
+              "(tests/test_parallel.py determinism suite)")
+
+    _CONSTRUCTORS = ("random.Random", "np.random.default_rng",
+                     "numpy.random.default_rng", "np.random.RandomState",
+                     "numpy.random.RandomState")
+
+    def visit_Call(self, ctx, node):
+        name = call_name(node)
+        if name is None:
+            return
+        is_ctor = name in self._CONSTRUCTORS
+        is_seed = name.endswith(".seed") or name in (
+            "np.random.PRNGKey", "jax.random.PRNGKey")
+        if is_ctor and not node.args and not node.keywords:
+            yield self.finding(
+                ctx, node,
+                f"{name}() without a seed draws entropy from the OS — "
+                f"every run gets a different stream")
+            return
+        if not (is_ctor or is_seed):
+            return
+        for arg in ast.walk(node):
+            if isinstance(arg, ast.Call) \
+                    and call_name(arg) in _TIME_SOURCES:
+                yield self.finding(
+                    ctx, node,
+                    f"{name}(...) is seeded from {call_name(arg)}() — "
+                    f"time/entropy-seeded RNG cannot replay")
+                return
+
+
+class DrawInSetIteration(Rule):
+    name = "rng-set-iteration"
+    severity = ERROR
+    scope = ("core/",)
+    invariant = ("RNG draw order never depends on set/dict hash order: no "
+                 "draws inside iteration over a set")
+    oracle = ("cross-process bit-parity (PYTHONHASHSEED varies per "
+              "worker; tests/test_parallel.py)")
+
+    def visit_Call(self, ctx, node):
+        if not isinstance(node.func, ast.Attribute):
+            return
+        if node.func.attr not in _RNG_METHODS \
+                or not _is_rng_receiver(node.func.value):
+            return
+        loop = enclosing(node, ast.For, ast.comprehension)
+        # comprehension generators aren't parent-linked the same way; walk
+        # For loops here and comprehensions below
+        while loop is not None:
+            if isinstance(loop, ast.For) and is_set_expr(loop.iter):
+                yield self.finding(
+                    ctx, node,
+                    "RNG draw inside iteration over a set — draw order "
+                    "follows hash order and differs between processes; "
+                    "iterate a sorted() or list-ordered view")
+                return
+            loop = enclosing(loop, ast.For)
+
+    def visit_comprehension(self, ctx, node):
+        if not is_set_expr(node.iter):
+            return
+        comp = parent(node)
+        if comp is None:
+            return
+        for sub in ast.walk(comp):
+            if isinstance(sub, ast.Call) \
+                    and isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr in _RNG_METHODS \
+                    and _is_rng_receiver(sub.func.value):
+                yield self.finding(
+                    ctx, sub,
+                    "RNG draw inside a comprehension over a set — draw "
+                    "order follows hash order and differs between "
+                    "processes; iterate a sorted() view")
+                return

@@ -40,7 +40,20 @@ from .core.methodology import (DEFAULT_CUTOFF, AggregateReport, SpaceScorer,
                                make_scorer)
 from .core.parallel import CampaignExecutor, CampaignJournal
 
-__all__ = ["Tuner", "TuningRun", "describe_space", "hyperparam_space_stats"]
+__all__ = ["Tuner", "TuningRun", "describe_space", "hyperparam_space_stats",
+           "lint"]
+
+
+def lint(paths: Sequence[str] | None = None,
+         baseline: str | None = None):
+    """Run parity-lint (the determinism & pickle-safety static analysis,
+    ``repro.analysis``) over ``paths`` (default ``src/repro``) and return
+    its ``LintResult`` — the programmatic face of ``python -m repro
+    lint``. ``baseline`` is a path to a grandfathered-findings file; see
+    docs/static-analysis.md for the rule catalogue."""
+    from .analysis import lint_paths
+    return lint_paths(list(paths) if paths else ["src/repro"],
+                      baseline=baseline)
 
 
 def describe_space(space) -> dict:

@@ -86,7 +86,7 @@ class CheckpointManager:
 
     def all_steps(self) -> list:
         out = []
-        for name in os.listdir(self.directory):
+        for name in sorted(os.listdir(self.directory)):
             m = re.fullmatch(r"ckpt_(\d+)\.npz", name)
             if m:
                 out.append(int(m.group(1)))

@@ -24,6 +24,9 @@ One entry point for the paper's workflow, replacing the ad-hoc scripts in
              (the paper's Table II hub-building runs), resumable per shard
   merge-cache fold recording shards (from crashed/partial/parallel runs)
              into one canonical cache file
+  lint       parity-lint: static analysis of the determinism / pickle /
+             f64 / protocol contracts (docs/static-analysis.md); the CI
+             gate is ``python -m repro lint src/repro``
 
 Search spaces come either from the benchmark hub (``--kernels/--devices``
 or ``--split``, Sec. III-D) or from explicit T4 cache files (``--cache``)
@@ -33,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import ast
+import os
 import sys
 from typing import Sequence
 
@@ -324,6 +328,65 @@ def cmd_merge_cache(args) -> int:
     return 0
 
 
+DEFAULT_BASELINE = "parity-lint-baseline.json"
+
+
+def cmd_lint(args) -> int:
+    """parity-lint: the determinism/pickle-safety static-analysis gate
+    (``repro.analysis``; rule catalogue in docs/static-analysis.md)."""
+    import json as _json
+
+    from .analysis import baseline as _baseline
+    from .analysis import default_rules, lint_paths
+    from .analysis.report import rule_catalogue, to_json, to_text
+
+    rules = default_rules()
+    if args.list_rules:
+        print(rule_catalogue(rules))
+        return 0
+    paths = args.paths or ["src/repro"]
+    for p in paths:
+        if not os.path.exists(p):
+            raise SystemExit(f"error: no such path: {p}")
+    baseline_path = args.baseline
+    if baseline_path is None and not args.no_baseline \
+            and os.path.exists(DEFAULT_BASELINE):
+        baseline_path = DEFAULT_BASELINE
+    if args.no_baseline or args.write_baseline:
+        baseline_path = None
+    result = lint_paths(paths, baseline=baseline_path, rules=rules)
+    if args.write_baseline:
+        out = args.baseline or DEFAULT_BASELINE
+        lines: dict = {}
+
+        def line_text(f):
+            if f.path not in lines:
+                for root in paths:
+                    cand = os.path.join(root, f.path)
+                    if os.path.exists(cand):
+                        with open(cand, "r", encoding="utf-8") as fh:
+                            lines[f.path] = fh.read().splitlines()
+                        break
+                else:
+                    lines[f.path] = []
+            text = lines[f.path]
+            return text[f.line - 1] if 1 <= f.line <= len(text) else ""
+
+        n = _baseline.write(out, result.findings, line_text)
+        print(f"wrote {n} baseline entr{'y' if n == 1 else 'ies'} "
+              f"covering {len(result.findings)} finding(s) -> {out}")
+        return 0
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as f:
+            _json.dump(to_json(result, rules), f, indent=2)
+            f.write("\n")
+    if args.format == "json":
+        print(_json.dumps(to_json(result, rules), indent=2))
+    else:
+        print(to_text(result))
+    return 0 if result.ok else 1
+
+
 def _print_ranking(results: dict, top: int) -> None:
     ranked = sorted(results.items(), key=lambda kv: -kv[1].score)
     for hp_id, r in ranked[:top]:
@@ -452,6 +515,29 @@ def build_parser() -> argparse.ArgumentParser:
     pmc.add_argument("--out", required=True, metavar="PATH",
                      help="output cache path (.json/.json.gz/.json.zst)")
     pmc.set_defaults(fn=cmd_merge_cache)
+
+    pl = sub.add_parser("lint", help="parity-lint: determinism & "
+                        "pickle-safety static analysis (the CI gate)")
+    pl.add_argument("paths", nargs="*", metavar="PATH",
+                    help="files/directories to lint (default: src/repro)")
+    pl.add_argument("--baseline", default=None, metavar="PATH",
+                    help=f"baseline of grandfathered findings (default: "
+                         f"{DEFAULT_BASELINE} when present)")
+    pl.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file: report everything")
+    pl.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings as the new baseline "
+                         "(to --baseline or the default path) and exit 0")
+    pl.add_argument("--format", choices=("text", "json"), default="text",
+                    help="stdout format (json is the machine-readable "
+                         "report, incl. the rule catalogue)")
+    pl.add_argument("--report", default=None, metavar="PATH",
+                    help="also write the JSON report to PATH (the CI "
+                         "artifact), regardless of --format")
+    pl.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue (invariant + runtime "
+                         "oracle per rule) and exit")
+    pl.set_defaults(fn=cmd_lint)
     return p
 
 
@@ -461,7 +547,12 @@ def main(argv: Sequence[str] | None = None) -> int:
         return args.fn(args)
     except ValueError as e:
         # domain errors (journal mismatch, bad cache format, unknown
-        # hyperparameters) are user errors, not crashes
+        # hyperparameters) are user errors, not crashes; this includes
+        # json.JSONDecodeError (a ValueError) from malformed inputs
+        raise SystemExit(f"error: {e}")
+    except OSError as e:
+        # missing/unreadable caches, journals, baselines, shard files:
+        # one-line error, not a traceback
         raise SystemExit(f"error: {e}")
 
 

@@ -246,6 +246,13 @@ class SimulationRunner(Runner):
                                    else False)
         return eng or None
 
+    def __getstate__(self) -> dict:
+        """Drop the probed engine handle: it captures whether *this*
+        process can dispatch jax (and, once bound, a jax-importing
+        ``ReplayEngine``), so a pickled runner must re-probe in the
+        receiving process — which may have a different backend."""
+        return {**self.__dict__, "_jax_eng": None}
+
     def _evaluate(self, config: Config) -> CachedResult:
         try:
             return self.cache.lookup(config)
