@@ -41,6 +41,16 @@ on. Components:
                    the timed region; the jit compile is warmed outside it
                    too. Skipped (not failed) when no jax backend can
                    dispatch — the committed baseline is recorded with one.
+  hub_lookup       warmed ``service.ConfigHub`` exact-hit lookups (a dict
+                   probe of the precomputed per-entry best) vs the naive
+                   answer path a caller without the service pays per call:
+                   a scan over the loaded cache's ``results.items()`` plus
+                   the winning config-id decode. Both sides run from
+                   memory — the service's zero-disk claim is asserted
+                   outside the timed region (``disk_loads`` stays flat),
+                   as is best-config parity between the two paths.
+                   Shape-miss (transfer) lookup throughput is recorded as
+                   informational ``transfer_*`` extras.
   local_search     neighborhood-heavy local search (greedy ILS + MLS over
                    Hamming neighborhoods) as 25-repeat fused grids: the
                    recorded per-round ask streams — whole neighborhoods as
@@ -85,8 +95,8 @@ from repro.core.tunable import tunables_from_dict
 from .common import FAST
 
 BENCH_FORMAT = "repro-bench-simulate"
-BENCH_VERSION = 4  # v4: jax_replay (jitted engine); v3: space_compile +
-#                         local_search (compiled spaces)
+BENCH_VERSION = 5  # v5: hub_lookup (ConfigHub service); v4: jax_replay
+#                         (jitted engine); v3: space_compile + local_search
 
 # the campaign component's hyperparameter set: a slice of the Table III
 # grids, small enough for CI, population-shaped so the batch step is on
@@ -105,7 +115,7 @@ SMALL_SPACE_N = 512
 
 
 def _hub_caches() -> list[CacheFile]:
-    from repro.core.dataset import DEFAULT_ROOT, load_hub
+    from repro.hub import DEFAULT_ROOT, load_hub
     hub = load_hub(DEFAULT_ROOT, **HUB_SELECTION)
     return [c for _, c in sorted(hub.items())]
 
@@ -528,6 +538,77 @@ def bench_local_search(caches: "list[CacheFile]") -> dict:
                       sa_n_evals=sa_evals)
 
 
+HUB_LOOKUP_CALLS = 100  # lookups per target per timed pass
+
+
+def bench_hub_lookup() -> dict:
+    """Warmed ``ConfigHub`` exact hits vs the naive per-call answer path.
+
+    vec:    ``ConfigHub.lookup`` on a warmed service — after the entry's
+            one-time materialization an exact hit is a dict probe of the
+            precomputed best (the microsecond claim ``service`` makes);
+    scalar: what a caller without the service pays on every request even
+            with the cache already in memory: a full scan over
+            ``results.items()`` for the fastest ok config plus the winning
+            config-id decode.
+    Parity (best config and value) and the zero-disk claim (``disk_loads``
+    flat across the timed passes) are asserted outside the timed region.
+    Shape-miss lookups — donor search over the index plus a cached best —
+    are timed as informational ``transfer_*`` extras, not gated.
+    """
+    from repro.hub import DEFAULT_ROOT
+    from repro.service import ConfigHub
+    hub = ConfigHub(DEFAULT_ROOT)
+    caches = {(c.kernel, c.device): c for c in _hub_caches()}
+    targets = sorted(caches)
+
+    def naive_best(cache: CacheFile) -> tuple:
+        best_key, best_v = None, float("inf")
+        for key, res in cache.results.items():
+            if res.status == "ok" and res.time_s < best_v:
+                best_v, best_key = res.time_s, key
+        cfg = cache.space.as_dict(cache.space.config_from_id(best_key))
+        return cfg, best_v
+
+    for kernel, device in targets:  # warm-up + parity, outside timed region
+        r = hub.lookup(kernel, device=device)
+        cfg, val = naive_best(caches[(kernel, device)])
+        assert r.status == "exact" and (r.best_config, r.best_value) \
+            == (cfg, val), f"hub_lookup parity violation: {kernel}@{device}"
+    loads = hub.disk_loads
+
+    def vec():
+        for _ in range(HUB_LOOKUP_CALLS):
+            for kernel, device in targets:
+                hub.lookup(kernel, device=device)
+
+    def sca():
+        for _ in range(HUB_LOOKUP_CALLS):
+            for kernel, device in targets:
+                naive_best(caches[(kernel, device)])
+
+    w_vec, w_sca = _best_pair(vec, sca)
+    assert hub.disk_loads == loads, \
+        "hub_lookup: warmed exact hits touched disk"
+    n_lookups = HUB_LOOKUP_CALLS * len(targets)
+
+    # -- transfer throughput (shape miss -> nearest donor), informational
+    miss = {"m": 2048}
+    assert hub.lookup("gemm", miss).status == "transfer"  # donor warmed
+
+    def transfer():
+        for _ in range(HUB_LOOKUP_CALLS):
+            hub.lookup("gemm", miss)
+
+    w_tr = _best_of(transfer)
+    return _component(w_vec, w_sca,
+                      lookups_per_sec=n_lookups / w_vec,
+                      lookups_per_sec_scalar=n_lookups / w_sca,
+                      n_lookups=n_lookups, n_entries=len(targets),
+                      transfer_wall_s=w_tr,
+                      transfer_per_sec=HUB_LOOKUP_CALLS / w_tr)
+
+
 JAX_REPLAY_RUNS = 64  # concurrent runs in the fused vmapped dispatch
 
 
@@ -618,6 +699,7 @@ def run_bench() -> dict:
                              "strategies": [f"{s}:{sorted(hp.items())}"
                                             for s, hp in LOCAL_SEARCH_SET]},
             "jax_replay": {"runs": JAX_REPLAY_RUNS},
+            "hub_lookup": {"calls": HUB_LOOKUP_CALLS},
         },
         "components": {
             "replay_fresh": fresh_c,
@@ -629,6 +711,7 @@ def run_bench() -> dict:
             "space_compile": bench_space_compile(hub),
             "local_search": bench_local_search(hub),
             "jax_replay": bench_jax_replay(big),
+            "hub_lookup": bench_hub_lookup(),
         },
     }
     comp = report["components"]

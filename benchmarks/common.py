@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402,F401  (re-exported for figure modules)
 
-from repro.core.dataset import load_hub, train_test_caches  # noqa: E402,F401
+from repro.hub import load_hub, train_test_caches  # noqa: E402,F401
 from repro.core.hypertuner import (HyperConfigResult,  # noqa: E402,F401
                                    HyperTuningResult, exhaustive_hypertune,
                                    score_hyperconfig)

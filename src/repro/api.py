@@ -40,8 +40,126 @@ from .core.methodology import (DEFAULT_CUTOFF, AggregateReport, SpaceScorer,
                                make_scorer)
 from .core.parallel import CampaignExecutor, CampaignJournal
 
-__all__ = ["Tuner", "TuningRun", "describe_space", "hyperparam_space_stats",
-           "lint"]
+__all__ = ["Hub", "Tuner", "TuningRun", "describe_space",
+           "hyperparam_space_stats", "lint"]
+
+
+class Hub:
+    """First-class facade over the benchmark hub (the FAIR dataset,
+    Sec. III-D) and the lookup service built on it.
+
+        hub = Hub()                       # the bundled hub root
+        hub.verify()                      # sha256 every indexed file
+        caches = hub.caches(split="train")  # scorer inputs, verified
+        hub.lookup("gemm", device="tpu_v5e")  # ConfigHub exact/transfer
+
+    Replaces the retired ``core.dataset`` free functions (which now shim
+    here behind ``HubDeprecationWarning``). Storage primitives live in
+    ``repro.hub.storage``; the lookup service in ``repro.service``.
+    """
+
+    def __init__(self, root: str | None = None, verify: bool = True):
+        from .hub import storage
+        self._storage = storage
+        self.root = root or storage.DEFAULT_ROOT
+        self.verify_digests = verify
+        self._service = None
+
+    @classmethod
+    def build(cls, root: str | None = None,
+              progress: Callable[[str], None] = print) -> "Hub":
+        """Brute-force all hub spaces into ``root`` and return the facade."""
+        from .hub import storage
+        hub = cls(root)
+        storage.build_hub(hub.root, progress)
+        return hub
+
+    @property
+    def manifest(self) -> dict:
+        return self._storage.read_manifest(self.root)
+
+    def verify(self, strict: bool = True) -> dict:
+        """sha256-check every indexed file; returns ``{entry: reason}``
+        failures (empty = intact). ``strict`` raises ``HubError`` on any."""
+        failures = self._storage.verify_manifest(self.root)
+        if failures and strict:
+            raise self._storage.HubError(
+                f"hub at {self.root} failed verification: "
+                + "; ".join(f"{k}: {v}" for k, v in sorted(failures.items())))
+        return failures
+
+    def load(self, kernels: Sequence[str] | None = None,
+             devices: Sequence[str] | None = None) -> dict:
+        """``{(kernel, device): CacheFile}`` for the default-shape entries,
+        digest-verified per file unless the facade was built with
+        ``verify=False``."""
+        return self._storage.load_hub(self.root, kernels, devices,
+                                      verify=self.verify_digests)
+
+    def caches(self, split: str | None = None,
+               kernels: Sequence[str] | None = None,
+               devices: Sequence[str] | None = None) -> list[CacheFile]:
+        """Cache files as a deterministic list — the scorer-input shape.
+        ``split`` ("train"/"test") selects the paper's device split;
+        explicit ``devices`` override it."""
+        if devices is None and split is not None:
+            from .core.devices import TEST_DEVICES, TRAIN_DEVICES
+            devices = list(TRAIN_DEVICES if split == "train"
+                           else TEST_DEVICES)
+        hub = self.load(kernels, devices)
+        return [c for _, c in sorted(hub.items())]
+
+    def train_test_caches(self) -> tuple:
+        return self._storage.train_test_caches(
+            self.root, verify=self.verify_digests)
+
+    def register(self, cache: CacheFile, problem=None) -> str:
+        """Save a recorded cache into the hub layout, index it in the
+        manifest, and invalidate live lookup services; returns the entry
+        key."""
+        key = self._storage.register_cache(self.root, cache, problem=problem)
+        from .service import notify_cache_merged
+        notify_cache_merged(self.root, kernel=cache.kernel)
+        return key
+
+    def service(self, ttl_s: float | None = None,
+                warm_start: bool | Mapping = False):
+        """The ``repro.service.ConfigHub`` over this root (memoized per
+        facade; see docs/service.md for lookup semantics)."""
+        if self._service is None:
+            from .service import ConfigHub
+            self._service = ConfigHub(self.root, verify=self.verify_digests,
+                                      ttl_s=ttl_s, warm_start=warm_start)
+        return self._service
+
+    def lookup(self, kernel: str, problem: Mapping | None = None,
+               device: str = "tpu_v5e"):
+        """Best known config for (kernel, problem, device) — delegates to
+        the memoized service; returns a ``LookupResult``."""
+        return self.service().lookup(kernel, problem, device)
+
+    def stats(self) -> dict:
+        """Manifest-level summary (entries, kernels, devices, sizes) plus
+        live service counters when a service has been created."""
+        m = self.manifest
+        out = {
+            "root": self.root,
+            "version": m.get("version"),
+            "entries": len(m["files"]),
+            "kernels": sorted({self._storage.split_key(k)[0]
+                               for k in m["files"]}),
+            "devices": sorted({self._storage.split_key(k)[1]
+                               for k in m["files"]}),
+            "n_configs": sum(e.get("n_configs", 0)
+                             for e in m["files"].values()),
+            "n_ok": sum(e.get("n_ok", 0) for e in m["files"].values()),
+            "bruteforce_hours": round(sum(
+                sum(v.values()) for v in m.get("bruteforce_hours",
+                                               {}).values()), 1),
+        }
+        if self._service is not None:
+            out["service"] = self._service.stats()
+        return out
 
 
 def lint(paths: Sequence[str] | None = None,
@@ -151,6 +269,7 @@ class Tuner:
         self.progress = progress
         self._scorers: list[SpaceScorer] | None = None
         self._executor: CampaignExecutor | None = None
+        self._hub: Hub | None = None
 
     # ----------------------------------------------------------- resources
     @property
@@ -167,15 +286,18 @@ class Tuner:
         if self._caches is not None:
             return [c if isinstance(c, CacheFile) else CacheFile.load(c)
                     for c in self._caches]
-        from .core.dataset import DEFAULT_ROOT, load_hub
-        from .core.devices import TEST_DEVICES, TRAIN_DEVICES
-        devices = self._devices or list(
-            TRAIN_DEVICES if self._split == "train" else TEST_DEVICES)
-        hub = load_hub(self._hub_root or DEFAULT_ROOT,
-                       kernels=self._kernels, devices=devices)
-        if not hub:
+        caches = self.hub.caches(split=self._split, kernels=self._kernels,
+                                 devices=self._devices)
+        if not caches:
             raise ValueError("no hub spaces matched the selection")
-        return [c for _, c in sorted(hub.items())]
+        return caches
+
+    @property
+    def hub(self) -> Hub:
+        """The ``Hub`` facade for this tuner's ``hub_root``."""
+        if self._hub is None:
+            self._hub = Hub(self._hub_root)
+        return self._hub
 
     @property
     def executor(self) -> CampaignExecutor:
@@ -316,6 +438,15 @@ class Tuner:
                          wall_seconds=time.perf_counter() - t0,
                          simulated_seconds=measured,
                          cache=cache, cache_path=out)
+
+    def lookup(self, kernel: str, problem: Mapping | None = None,
+               device: str = "tpu_v5e"):
+        """Best known config for (kernel, problem shape, device) from the
+        recorded hub — exact hit, nearest-shape transfer, or cold; returns
+        a ``repro.service.LookupResult`` (``TuningRun``-shaped: ``mode``,
+        ``best_config``, ``best_value``, ``wall_seconds`` plus
+        status/provenance/confidence). See docs/service.md."""
+        return self.hub.lookup(kernel, problem, device)
 
 
 def _as_journal(journal: str | CampaignJournal | None

@@ -23,7 +23,15 @@ One entry point for the paper's workflow, replacing the ad-hoc scripts in
   bruteforce exhaustively record a registered kernel's whole valid space
              (the paper's Table II hub-building runs), resumable per shard
   merge-cache fold recording shards (from crashed/partial/parallel runs)
-             into one canonical cache file
+             into one canonical cache file — ``--hub-root`` also registers
+             the merge into a hub and evicts stale service index entries
+  lookup     best known config for (kernel, problem shape, device) from
+             the recorded hub: exact hit, nearest-shape transfer with
+             confidence, or cold (docs/service.md)
+  serve      line-oriented lookup service: JSON requests on stdin, one
+             ``LookupResult`` JSON per line on stdout
+  hub        hub dataset management: build, info, verify (sha256 every
+             indexed file), stats
   lint       parity-lint: static analysis of the determinism / pickle /
              f64 / protocol contracts (docs/static-analysis.md); the CI
              gate is ``python -m repro lint src/repro``
@@ -325,6 +333,136 @@ def cmd_merge_cache(args) -> int:
     print(f"merged {cache.meta['n_shards']} shards -> {args.out}: "
           f"{cache.meta['n_configs']} configs ({cache.meta['n_ok']} ok) "
           f"for {cache.kernel}@{cache.device}")
+    if args.hub_root:
+        from .api import Hub
+        key = Hub(args.hub_root).register(
+            cache, problem=header.get("problem") or None)
+        print(f"registered in hub {args.hub_root} as {key} "
+              f"(live lookup indexes invalidated)")
+    return 0
+
+
+def _lookup_hub(args):
+    """A ``ConfigHub`` from the shared lookup/serve options."""
+    from .service import ConfigHub
+    warm: bool | dict = False
+    if getattr(args, "warm_start", False):
+        warm = {"max_evals": args.warm_max_evals}
+    return ConfigHub(args.hub_root or _default_hub_root(),
+                     verify=not args.no_verify,
+                     ttl_s=getattr(args, "ttl", None), warm_start=warm)
+
+
+def _default_hub_root() -> str:
+    from .hub import DEFAULT_ROOT
+    return DEFAULT_ROOT
+
+
+def _print_lookup(r, as_json: bool) -> None:
+    import json as _json
+    if as_json:
+        print(_json.dumps(r.to_json()))
+        return
+    print(f"{r.kernel}@{r.device} "
+          f"{'{' + ', '.join(f'{k}={v}' for k, v in r.problem.items()) + '}'}"
+          f": {r.status} (confidence {r.confidence:.2f})")
+    if r.best_config is not None:
+        val = (f"{r.best_value * 1e3:.3f} ms"
+               if r.best_value not in (None, float('inf')) else "n/a")
+        print(f"  best: {r.best_config} ({val}, over {r.n_configs} "
+              f"recorded ok configs)")
+    if r.status == "transfer":
+        print(f"  donor: {r.source} problem={r.donor_problem} "
+              f"shape-distance {r.distance:.3f}")
+    elif r.source:
+        print(f"  source: {r.source}")
+    print(f"  resolved in {r.wall_seconds * 1e6:.0f} us")
+
+
+def cmd_lookup(args) -> int:
+    """One-shot service lookup against the recorded hub."""
+    hub = _lookup_hub(args)
+    r = hub.lookup(args.kernel, _parse_hyperparams(args.problem) or None,
+                   args.device)
+    if args.wait and r.status == "warming" and hub.warm_start is not None:
+        flight = hub.warm_start.ensure(args.kernel, args.device, r.problem)
+        flight.join(args.wait)
+        r = hub.lookup(args.kernel, _parse_hyperparams(args.problem) or None,
+                       args.device)
+    _print_lookup(r, args.json)
+    return 0 if r.found else 3
+
+
+def serve_requests(hub, lines) -> "object":
+    """The ``serve`` loop, factored for tests: yields one result dict per
+    input line. A line is a JSON object (one request: ``kernel`` plus
+    optional ``problem``/``device``) or a JSON array of them (batched
+    through ``lookup_many``). Bad lines yield an ``error`` dict instead of
+    killing the service."""
+    import json as _json
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            req = _json.loads(line)
+            if isinstance(req, list):
+                for r in hub.lookup_many(req):
+                    yield r.to_json()
+            else:
+                yield hub.lookup(req["kernel"], req.get("problem"),
+                                 req.get("device", "tpu_v5e")).to_json()
+        except (ValueError, KeyError, TypeError) as e:
+            yield {"error": f"{type(e).__name__}: {e}", "request": line}
+
+
+def cmd_serve(args) -> int:
+    """Stdin/stdout lookup service (one JSON request per line)."""
+    import json as _json
+    hub = _lookup_hub(args)
+    if args.warm_up:
+        n = hub.warm_up()
+        print(f"warmed {n} hub entries", file=sys.stderr, flush=True)
+    print(f"serving lookups over {hub.root} "
+          f"(entries: {hub.stats()['entries']}); one JSON request per "
+          f"line, e.g. {{\"kernel\": \"gemm\", \"device\": \"tpu_v5e\"}}",
+          file=sys.stderr, flush=True)
+    for result in serve_requests(hub, sys.stdin):
+        print(_json.dumps(result), flush=True)
+    stats = hub.stats()
+    print(f"served {sum(stats['lookups'].values())} lookups "
+          f"({stats['lookups']}); {stats['disk_loads']} cache loads",
+          file=sys.stderr)
+    return 0
+
+
+def cmd_hub(args) -> int:
+    """Hub dataset management (build / info / verify / stats)."""
+    import json as _json
+
+    from .api import Hub
+    hub = Hub(args.root)
+    if args.action == "build":
+        Hub.build(args.root)
+        m = hub.manifest
+        print(f"hub built at {os.path.abspath(hub.root)} in "
+              f"{m['build_wall_seconds']:.1f}s wall")
+        return 0
+    if args.action == "verify":
+        failures = hub.verify(strict=False)
+        if failures:
+            for key, reason in sorted(failures.items()):
+                print(f"  FAIL {key}: {reason}")
+            print(f"{len(failures)} of {hub.stats()['entries']} entries "
+                  f"failed verification")
+            return 1
+        print(f"ok: all {hub.stats()['entries']} entries verified "
+              f"(sha256)")
+        return 0
+    if args.action == "info":
+        print(_json.dumps(hub.manifest, indent=1))
+        return 0
+    print(_json.dumps(hub.stats(), indent=1))  # stats
     return 0
 
 
@@ -514,7 +652,57 @@ def build_parser() -> argparse.ArgumentParser:
                      help="shard JSONL files (from record/bruteforce)")
     pmc.add_argument("--out", required=True, metavar="PATH",
                      help="output cache path (.json/.json.gz/.json.zst)")
+    pmc.add_argument("--hub-root", default=None, metavar="DIR",
+                     help="also register the merged cache in this hub's "
+                          "manifest and invalidate live lookup services")
     pmc.set_defaults(fn=cmd_merge_cache)
+
+    def _add_lookup_args(pp, serve: bool) -> None:
+        pp.add_argument("--hub-root", default=None, metavar="DIR",
+                        help="hub directory (default: the bundled hub)")
+        pp.add_argument("--no-verify", action="store_true",
+                        help="skip sha256 verification when materializing "
+                             "hub entries")
+        pp.add_argument("--ttl", type=float, default=None, metavar="SECONDS",
+                        help="re-stat materialized entries older than this "
+                             "(default: only explicit invalidation)")
+        pp.add_argument("--warm-start", action="store_true",
+                        help="launch a journaled recording campaign "
+                             "(single-flight) for cold keys")
+        pp.add_argument("--warm-max-evals", type=int, default=32,
+                        help="fresh-eval budget of a warm-start campaign")
+        if not serve:
+            pp.add_argument("--kernel", required=True,
+                            help="kernel name (hub or registry)")
+            pp.add_argument("--device", default="tpu_v5e")
+            pp.add_argument("--problem", default=None, metavar="K=V,...",
+                            help="problem sizes (default: the kernel's "
+                                 "hub shape)")
+            pp.add_argument("--json", action="store_true",
+                            help="print the LookupResult as JSON")
+            pp.add_argument("--wait", type=float, default=None,
+                            metavar="SECONDS",
+                            help="with --warm-start: block up to SECONDS "
+                                 "for the campaign before answering")
+
+    plk = sub.add_parser("lookup", help="best known config for (kernel, "
+                         "problem, device) from the recorded hub")
+    _add_lookup_args(plk, serve=False)
+    plk.set_defaults(fn=cmd_lookup)
+
+    psv = sub.add_parser("serve", help="lookup service: JSON requests on "
+                         "stdin, LookupResult JSON lines on stdout")
+    _add_lookup_args(psv, serve=True)
+    psv.add_argument("--warm-up", action="store_true",
+                     help="materialize every hub entry before serving")
+    psv.set_defaults(fn=cmd_serve)
+
+    phub = sub.add_parser("hub", help="hub dataset management: build, "
+                          "info, verify (sha256), stats")
+    phub.add_argument("action", choices=("build", "info", "verify", "stats"))
+    phub.add_argument("--root", default=None,
+                      help="hub directory (default: the bundled hub)")
+    phub.set_defaults(fn=cmd_hub)
 
     pl = sub.add_parser("lint", help="parity-lint: determinism & "
                         "pickle-safety static analysis (the CI gate)")

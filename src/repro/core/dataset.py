@@ -1,177 +1,68 @@
-"""Benchmark Hub for Auto-Tuning — the FAIR dataset (paper Sec. III-D).
+"""Deprecated shim — the benchmark-hub dataset moved to ``repro.hub``.
 
-24 exhaustively brute-forced search spaces: the Cartesian product of four
-real kernels (dedispersion, convolution, hotspot, GEMM — Sec. III-D) and six
-device models (devices.py). Per kernel we store a T1-style input descriptor
-(tunables, constraints, problem sizes) and per (kernel × device) a T4-mini
-results file with 32 raw observations per configuration, zstd-compressed.
+The storage layer now lives in ``repro.hub.storage`` and the user-facing
+facade is ``repro.api.Hub``; this module keeps the historical free-function
+surface alive behind ``HubDeprecationWarning`` (escalated to an error under
+pytest, so no in-tree caller can quietly regress to it).
 
-FAIR mapping (Sec. III-D):
-  Findable     — hub/manifest.json indexes every file with checksums
-  Accessible   — plain JSON(+zstd), open format, versioned
-  Interoperable— T1/T4-style layouts shared with the autotuning-methodology
-                 ecosystem
-  Reusable     — directly consumable by the simulation mode without access
-                 to the original "hardware" (here: without re-running the
-                 cost model)
+Two behavior changes ride along with the move, on the shims too:
+``DEFAULT_ROOT`` is normalized, and loading verifies the manifest's sha256
+checksums and raises ``repro.hub.HubError`` on a missing/corrupt hub
+instead of silently rebuilding (pass ``verify=False`` to skip digests).
 
-Build:  python -m repro.core.dataset build [--root hub]
+Build:  python -m repro hub build [--root hub]
 """
 from __future__ import annotations
 
-import argparse
-import hashlib
-import json
-import os
-import time
+import warnings
 
-from .cache import CachedResult, CacheFile
-from .costmodel import estimate
-from .devices import HUB_DEVICES, TEST_DEVICES, TRAIN_DEVICES
-
-HUB_VERSION = "1.0.0"
-DEFAULT_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..", "hub")
+from ..deprecations import HubDeprecationWarning
+from ..hub import storage as _storage
+from ..hub.storage import (DEFAULT_ROOT, HUB_VERSION, HubError,  # noqa: F401
+                           _sha256, brute_force, t1_descriptor)
 
 
-def _kernel_modules():
-    from ..kernels import HUB_KERNELS  # late import: keeps dataset light
-    return HUB_KERNELS
-
-
-def brute_force(kernel_name: str, device) -> CacheFile:
-    """Exhaustively evaluate one search space through the cost model —
-    the simulated analogue of the paper's Table II brute-force runs."""
-    mod = _kernel_modules()[kernel_name]
-    space = mod.space()
-    workload = mod.workload()
-    results: dict[str, CachedResult] = {}
-    sim_seconds = 0.0
-    for config in space.valid_configs:
-        cid = space.config_id(config)
-        est = estimate(workload, space.as_dict(config), device, cid)
-        results[cid] = CachedResult(est.status, est.time_s, est.times_s,
-                                    est.compile_s, device.overhead_s)
-        sim_seconds += results[cid].charge_s
-    meta = {
-        "hub_version": HUB_VERSION,
-        "device_model": device.name,
-        "n_configs": len(results),
-        "n_ok": sum(1 for r in results.values() if r.status == "ok"),
-        "simulated_bruteforce_hours": sim_seconds / 3600.0,
-    }
-    return CacheFile(kernel_name, device.name, space, results, meta)
-
-
-def t1_descriptor(kernel_name: str) -> dict:
-    """T1-style input descriptor for one kernel."""
-    mod = _kernel_modules()[kernel_name]
-    space = mod.space()
-    return {
-        "format": "T1-mini",
-        "kernel_name": kernel_name,
-        "objective": "time_s",
-        "minimize": True,
-        "tunable_parameters": {t.name: list(t.values) for t in space.tunables},
-        "restrictions": [c.description for c in space.constraints],
-        "cartesian_size": space.cartesian_size,
-        "constrained_size": space.size,
-    }
-
-
-def _sha256(path: str) -> str:
-    h = hashlib.sha256()
-    with open(path, "rb") as f:
-        for chunk in iter(lambda: f.read(1 << 20), b""):
-            h.update(chunk)
-    return h.hexdigest()
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.dataset.{name} is deprecated; use repro.hub.{name} "
+        f"(or the repro.api.Hub facade)", HubDeprecationWarning, stacklevel=3)
 
 
 def build_hub(root: str = DEFAULT_ROOT, progress=print) -> dict:
-    """Brute-force all 24 spaces and write the FAIR layout. Returns manifest."""
-    os.makedirs(root, exist_ok=True)
-    manifest: dict = {
-        "name": "Benchmark Hub for Auto-Tuning (simulated TPU device models)",
-        "version": HUB_VERSION,
-        "created_unix": time.time(),
-        "train_devices": list(TRAIN_DEVICES),
-        "test_devices": list(TEST_DEVICES),
-        "kernels": {},
-        "files": {},
-        "bruteforce_hours": {},
-    }
-    t0 = time.perf_counter()
-    for kname in _kernel_modules():
-        kdir = os.path.join(root, kname)
-        os.makedirs(kdir, exist_ok=True)
-        t1_path = os.path.join(kdir, "t1.json")
-        with open(t1_path, "w") as f:
-            json.dump(t1_descriptor(kname), f, indent=1)
-        manifest["kernels"][kname] = {"t1": os.path.relpath(t1_path, root)}
-        manifest["bruteforce_hours"][kname] = {}
-        for device in HUB_DEVICES:
-            cache = brute_force(kname, device)
-            out = os.path.join(kdir, f"{device.name}.t4.json.zst")
-            cache.save(out)
-            rel = os.path.relpath(out, root)
-            manifest["files"][f"{kname}@{device.name}"] = {
-                "path": rel,
-                "sha256": _sha256(out),
-                "n_configs": cache.meta["n_configs"],
-                "n_ok": cache.meta["n_ok"],
-            }
-            manifest["bruteforce_hours"][kname][device.name] = round(
-                cache.meta["simulated_bruteforce_hours"], 2)
-            progress(f"  built {kname}@{device.name}: "
-                     f"{cache.meta['n_ok']}/{cache.meta['n_configs']} ok, "
-                     f"{cache.meta['simulated_bruteforce_hours']:.1f} simulated h")
-    manifest["build_wall_seconds"] = time.perf_counter() - t0
-    with open(os.path.join(root, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    return manifest
+    _warn("build_hub")
+    return _storage.build_hub(root, progress)
 
 
-def load_hub(root: str = DEFAULT_ROOT, kernels=None, devices=None) -> dict:
-    """Load (kernel, device) -> CacheFile. Builds the hub if missing."""
-    manifest_path = os.path.join(root, "manifest.json")
-    if not os.path.exists(manifest_path):
-        build_hub(root)
-    with open(manifest_path) as f:
-        manifest = json.load(f)
-    out = {}
-    for key, entry in manifest["files"].items():
-        kname, dname = key.split("@")
-        if kernels is not None and kname not in kernels:
-            continue
-        if devices is not None and dname not in devices:
-            continue
-        out[(kname, dname)] = CacheFile.load(os.path.join(root, entry["path"]))
-    return out
+def load_hub(root: str = DEFAULT_ROOT, kernels=None, devices=None,
+             verify: bool = True) -> dict:
+    _warn("load_hub")
+    return _storage.load_hub(root, kernels, devices, verify=verify)
 
 
-def train_test_caches(root: str = DEFAULT_ROOT) -> tuple:
-    """The paper's split: 4 kernels × 3 train devices / × 3 test devices."""
-    all_caches = load_hub(root)
-    train = [c for (k, d), c in sorted(all_caches.items()) if d in TRAIN_DEVICES]
-    test = [c for (k, d), c in sorted(all_caches.items()) if d in TEST_DEVICES]
-    return train, test
+def train_test_caches(root: str = DEFAULT_ROOT, verify: bool = True) -> tuple:
+    _warn("train_test_caches")
+    return _storage.train_test_caches(root, verify=verify)
 
 
-def main() -> None:
+def main() -> None:  # pragma: no cover - delegates to the hub CLI
+    import argparse
+    import json
+    import os
+
     ap = argparse.ArgumentParser()
     ap.add_argument("command", choices=["build", "info"])
     ap.add_argument("--root", default=DEFAULT_ROOT)
     args = ap.parse_args()
     if args.command == "build":
-        m = build_hub(args.root)
+        m = _storage.build_hub(args.root)
         print(f"hub built at {os.path.abspath(args.root)} in "
               f"{m['build_wall_seconds']:.1f}s wall")
         total = sum(sum(v.values()) for v in m["bruteforce_hours"].values())
         print(f"simulated brute-force cost: {total:.0f} hours "
               f"(paper Table II analogue)")
     else:
-        with open(os.path.join(args.root, "manifest.json")) as f:
-            print(json.dumps(json.load(f), indent=1))
+        print(json.dumps(_storage.read_manifest(args.root), indent=1))
 
 
-if __name__ == "__main__":
+if __name__ == "__main__":  # pragma: no cover
     main()

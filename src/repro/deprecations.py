@@ -1,0 +1,27 @@
+"""Deprecation warning categories for redesigned API surfaces.
+
+Each retired surface keeps thin delegating shims that emit a *dedicated*
+``DeprecationWarning`` subclass, and ``pytest.ini`` escalates exactly those
+categories to errors — so no in-tree caller can quietly keep using a
+retired entry point, while out-of-tree callers get an ordinary, filterable
+deprecation period. (Precedent: ``core.driver.ProtocolDeprecationWarning``
+for the pre-ask/tell strategy protocol.)
+
+The classes live in this dependency-free module so that warning filters —
+``error::repro.deprecations.HubDeprecationWarning`` — can resolve their
+category without importing (and thereby warning through) the shims
+themselves.
+"""
+from __future__ import annotations
+
+
+class HubDeprecationWarning(DeprecationWarning):
+    """The ``core.dataset`` free functions (``build_hub`` / ``load_hub`` /
+    ``train_test_caches``) moved to ``repro.hub`` (storage layer) and the
+    ``repro.api.Hub`` facade."""
+
+
+class ServingMovedWarning(DeprecationWarning):
+    """``repro.serving`` (LLM token serving) moved to ``repro.inference``;
+    ``repro.service`` now unambiguously means the ConfigHub tuning
+    service."""

@@ -1,1 +1,18 @@
-"""repro subpackage."""
+"""Benchmark hub: FAIR on-disk storage for recorded tuning data.
+
+``repro.hub.storage`` is the data layer (build / load / verify /
+register); ``repro.api.Hub`` is the user-facing facade; ``repro.service``
+serves lookups over it. ``python -m repro hub build|info|verify`` is the
+CLI entry point.
+"""
+from .storage import (DEFAULT_ROOT, HUB_VERSION, HubError, build_hub,
+                      entry_key, hub_default_problem, load_cache, load_hub,
+                      problem_key, read_manifest, register_cache, split_key,
+                      train_test_caches, verify_manifest, write_manifest)
+
+__all__ = [
+    "DEFAULT_ROOT", "HUB_VERSION", "HubError", "build_hub", "entry_key",
+    "hub_default_problem", "load_cache", "load_hub", "problem_key",
+    "read_manifest", "register_cache", "split_key", "train_test_caches",
+    "verify_manifest", "write_manifest",
+]

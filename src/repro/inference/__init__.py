@@ -1,0 +1,6 @@
+"""LLM token inference (batched prefill + decode serving engine).
+
+Formerly ``repro.serving`` — renamed so that "serving" unambiguously means
+the ConfigHub tuning service (``repro.service``); ``repro.serving`` remains
+as a deprecation shim.
+"""

@@ -1,0 +1,79 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+``ServingEngine`` jits one prefill and one decode step per (batch, length)
+bucket and drives batched requests through them. The decode step is the
+function the dry-run lowers for the ``decode_*``/``long_*`` cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list            # token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+
+def make_decode_fn(cfg: ArchConfig):
+    """The jit-able single-token step (also lowered by the dry-run)."""
+    def step(params, cache, tokens, cache_len):
+        return decode_step(cfg, params, cache, tokens, cache_len)
+    return step
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(make_decode_fn(cfg))
+        self._prefill = jax.jit(
+            functools.partial(prefill, cfg), static_argnames=("max_len",))
+
+    def generate(self, requests: list, key=None) -> list:
+        """Greedy (or sampled) continuation for a batch of requests."""
+        cfg = self.cfg
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        toks = jnp.full((b, plen), 0, jnp.int32)
+        for i, r in enumerate(requests):  # left-pad-free: right-align prompts
+            toks = toks.at[i, :len(r.prompt)].set(jnp.asarray(r.prompt))
+        batch = {"tokens": toks}
+        if cfg.family == "audio":
+            batch["audio_embeds"] = jnp.zeros(
+                (b, cfg.n_audio_frames, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (b, cfg.n_patches, cfg.d_model), jnp.float32)
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(plen, dtype=jnp.int32)[None, :, None], (b, plen, 3))
+
+        last_logits, cache, cache_len = self._prefill(
+            self.params, batch, max_len=self.max_len)
+        max_new = max(r.max_new_tokens for r in requests)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        outs = [[] for _ in range(b)]
+        logits = last_logits
+        for t in range(max_new):
+            if requests[0].temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits / requests[0].temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            for i in range(b):
+                outs[i].append(int(nxt[i]))
+            logits, cache = self._decode(self.params, cache,
+                                         nxt[:, None].astype(jnp.int32),
+                                         cache_len)
+            cache_len = cache_len + 1
+        return outs

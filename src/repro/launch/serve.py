@@ -12,7 +12,7 @@ import jax
 
 from ..configs import get_config
 from ..models.transformer import init_params
-from ..serving.engine import Request, ServingEngine
+from ..inference.engine import Request, ServingEngine
 
 
 def main(argv=None) -> None:

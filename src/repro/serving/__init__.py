@@ -1,1 +1,17 @@
-"""repro subpackage."""
+"""Deprecated shim — LLM token serving moved to ``repro.inference``.
+
+The name ``serving`` now belongs to the tuning-as-a-service story
+(``repro.service``, the ConfigHub); the batched prefill+decode engine
+lives in ``repro.inference.engine``. Importing through here keeps working
+behind ``ServingMovedWarning`` (escalated to an error under pytest).
+"""
+from __future__ import annotations
+
+import warnings
+
+from ..deprecations import ServingMovedWarning
+
+warnings.warn(
+    "repro.serving moved to repro.inference (LLM token serving); "
+    "repro.service is the ConfigHub tuning service",
+    ServingMovedWarning, stacklevel=2)

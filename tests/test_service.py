@@ -1,0 +1,353 @@
+"""ConfigHub service tests: lookup semantics, transfer determinism,
+single-flight warm-start, invalidation, pickling, and the deprecation
+shims of the retired hub/serving surfaces (docs/service.md)."""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+
+import pytest
+
+from repro.core.cache import CachedResult, CacheFile
+from repro.core.searchspace import SearchSpace
+from repro.core.tunable import tunables_from_dict
+from repro.hub import storage
+from repro.service import (ConfigHub, notify_cache_merged, shape_distance,
+                           transfer_confidence)
+
+
+def toy_cache(kernel: str, device: str, values, n_err: int = 0) -> CacheFile:
+    """A tiny deterministic cache: config x=i scores ``values[i]``."""
+    space = SearchSpace(tunables_from_dict(
+        {"x": tuple(range(len(values) + n_err))}), name=f"{kernel}@{device}")
+    results = {}
+    for i, cfg in enumerate(space.valid_configs):
+        key = space.config_id(cfg)
+        if i < len(values):
+            v = float(values[i])
+            results[key] = CachedResult("ok", v, (v,), 0.1)
+        else:
+            results[key] = CachedResult("error", float("inf"), (), 0.1)
+    return CacheFile(kernel, device, space, results, {})
+
+
+@pytest.fixture()
+def toy_root(tmp_path):
+    """A synthetic hub: one kernel, two devices, three problem shapes."""
+    root = str(tmp_path / "hub")
+    storage.register_cache(root, toy_cache("toy", "devA", [3.0, 1.0, 2.0]),
+                           problem={"m": 64})
+    storage.register_cache(root, toy_cache("toy", "devA", [5.0, 4.0]),
+                           problem={"m": 128})
+    storage.register_cache(root, toy_cache("toy", "devB", [9.0, 8.0]),
+                           problem={"m": 64})
+    return root
+
+
+# ------------------------------------------------------------------ lookup
+def test_exact_hit(toy_root):
+    hub = ConfigHub(toy_root)
+    r = hub.lookup("toy", {"m": 64}, "devA")
+    assert r.status == "exact" and r.confidence == 1.0
+    assert r.best_config == {"x": 1} and r.best_value == 1.0
+    assert r.source == "toy@devA#m=64" and r.n_configs == 3
+    assert r.found and r.mode == "lookup"
+
+
+def test_exact_hit_touches_disk_once(toy_root, monkeypatch):
+    hub = ConfigHub(toy_root)
+    assert hub.disk_loads == 0  # construction reads only the manifest
+    hub.lookup("toy", {"m": 64}, "devA")
+    assert hub.disk_loads == 1
+    # after warm-up the hot path must not be able to touch disk at all
+    monkeypatch.setattr(storage, "load_cache",
+                        lambda *a, **k: pytest.fail("disk on hot path"))
+    for _ in range(32):
+        r = hub.lookup("toy", {"m": 64}, "devA")
+    assert r.status == "exact" and hub.disk_loads == 1
+
+
+def test_transfer_same_device_shape_miss(toy_root):
+    hub = ConfigHub(toy_root)
+    r = hub.lookup("toy", {"m": 96}, "devA")
+    assert r.status == "transfer"
+    # m=128 is log-nearer to 96 than m=64 is (ln(128/96) < ln(96/64))
+    assert r.source == "toy@devA#m=128"
+    assert r.best_config == {"x": 1}
+    assert r.donor_problem == {"m": 128}
+    assert r.distance == pytest.approx(shape_distance({"m": 96}, {"m": 128}))
+    assert r.confidence == pytest.approx(
+        transfer_confidence(r.distance, cross_device=False))
+    assert 0.0 < r.confidence < 1.0
+
+
+def test_transfer_prefers_same_device_shape_over_cross_device_exact():
+    # ordering is by distance first: an exact shape on another device beats
+    # a different shape on the requested device
+    assert (0.0, True) < (shape_distance({"m": 128}, {"m": 64}), False)
+
+
+def test_transfer_cross_device(toy_root):
+    hub = ConfigHub(toy_root)
+    r = hub.lookup("toy", {"m": 64}, "devC")
+    assert r.status == "transfer" and r.source == "toy@devA#m=64"
+    assert r.confidence == pytest.approx(
+        transfer_confidence(0.0, cross_device=True))
+
+
+def test_transfer_tiebreak_is_deterministic(tmp_path):
+    # two donors at identical distance (ln 2 on either side of m=64) and
+    # identical device: the lexicographically smaller problem_key wins,
+    # independent of registration order
+    for order in (("a", "b"), ("b", "a")):
+        root = str(tmp_path / f"hub-{order[0]}")
+        caches = {"a": ({"m": 32}, [2.0]), "b": ({"m": 128}, [4.0])}
+        for name in order:
+            problem, values = caches[name]
+            storage.register_cache(root, toy_cache("toy", "devA", values),
+                                   problem=problem)
+        r = ConfigHub(root).lookup("toy", {"m": 64}, "devA")
+        assert r.status == "transfer"
+        assert r.source == "toy@devA#m=128"  # "m=128" < "m=32" lexicographic
+
+
+def test_cold_without_warm_start(toy_root):
+    hub = ConfigHub(toy_root)
+    r = hub.lookup("other_kernel", {"m": 8}, "devA")
+    assert r.status == "cold" and r.best_config is None and not r.found
+    assert r.confidence == 0.0
+
+
+def test_lookup_many_batches(toy_root):
+    hub = ConfigHub(toy_root)
+    rs = hub.lookup_many([
+        {"kernel": "toy", "problem": {"m": 64}, "device": "devA"},
+        {"kernel": "toy", "problem": {"m": 64}, "device": "devA"},
+        {"kernel": "toy", "problem": {"m": 96}, "device": "devA"},
+    ])
+    assert [r.status for r in rs] == ["exact", "exact", "transfer"]
+    # two distinct entries served (m=64 exact, m=128 donor), each loaded once
+    assert hub.disk_loads == 2
+
+
+def test_shape_distance_properties():
+    assert shape_distance({"m": 64}, {"m": 64}) == 0.0
+    assert shape_distance({"m": 64}, {"m": 128}) == \
+        shape_distance({"m": 128}, {"m": 64})
+    # unshared dimensions cost a flat penalty on top of the shared part
+    d_shared = shape_distance({"m": 64}, {"m": 64, "n": 32})
+    assert d_shared == pytest.approx(1.0)
+    # non-numeric dims compare by equality
+    assert shape_distance({"layout": "nchw"}, {"layout": "nchw"}) == 0.0
+    assert shape_distance({"layout": "nchw"}, {"layout": "nhwc"}) == 1.0
+
+
+# --------------------------------------------------------- warm-start path
+def test_single_flight_warm_start(tmp_path):
+    root = str(tmp_path / "hub")
+    # seed the root with an unrelated kernel so the manifest exists
+    storage.register_cache(root, toy_cache("toy", "devA", [1.0]),
+                           problem={"m": 64})
+    hub = ConfigHub(root, warm_start={"max_evals": 4, "workers": 1})
+    from repro.kernels import get_kernel
+    problem = get_kernel("ssd").problem()  # smoke sizes: cheap space
+
+    results, barrier = [], threading.Barrier(2)
+
+    def go():
+        barrier.wait()
+        results.append(hub.lookup("ssd", problem, "tpu_v5e"))
+
+    threads = [threading.Thread(target=go) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert {r.status for r in results} <= {"warming", "warm"}
+    assert hub.warm_start.launches == 1  # single-flight: one campaign
+
+    flight = hub.warm_start.ensure("ssd", "tpu_v5e", problem)
+    assert flight.join(120.0) and flight.error is None
+    r = hub.lookup("ssd", problem, "tpu_v5e")
+    assert r.status == "exact" and r.best_config is not None
+    assert hub.stats()["warm_campaigns"] == 1
+    # the campaign journal is on disk (crash-safe, resumable shards)
+    journal_dir = os.path.join(root, ".warmstart")
+    assert any(p.endswith(".jsonl") for p in os.listdir(journal_dir))
+
+
+def test_warm_start_not_used_for_unknown_kernel(toy_root):
+    hub = ConfigHub(toy_root, warm_start=True)
+    r = hub.lookup("definitely_not_registered", {"m": 4}, "tpu_v5e")
+    assert r.status == "cold" and hub.warm_start.launches == 0
+
+
+# ----------------------------------------------------------- invalidation
+def test_register_invalidates_live_service(toy_root):
+    hub = ConfigHub(toy_root)
+    assert hub.lookup("toy", {"m": 64}, "devA").best_value == 1.0
+    # a re-recording found a better config; registering it must evict the
+    # live service's precomputed best (the merge-cache --hub-root hook)
+    storage.register_cache(toy_root, toy_cache("toy", "devA", [3.0, 0.5]),
+                           problem={"m": 64})
+    notified = notify_cache_merged(toy_root, kernel="toy")
+    assert notified >= 1
+    r = hub.lookup("toy", {"m": 64}, "devA")
+    assert r.best_value == 0.5 and r.n_configs == 2
+
+
+def test_ttl_picks_up_changed_file(toy_root):
+    hub = ConfigHub(toy_root, ttl_s=0.0)  # every lookup re-stats
+    assert hub.lookup("toy", {"m": 64}, "devA").best_value == 1.0
+    loads = hub.disk_loads
+    # unchanged file: TTL refresh re-stats but must not re-load
+    assert hub.lookup("toy", {"m": 64}, "devA").best_value == 1.0
+    assert hub.disk_loads == loads
+    storage.register_cache(toy_root, toy_cache("toy", "devA", [0.25]),
+                           problem={"m": 64})
+    assert hub.lookup("toy", {"m": 64}, "devA").best_value == 0.25
+
+
+# ------------------------------------------------------- pickling / lint
+def test_confighub_pickles_without_columns(toy_root):
+    hub = ConfigHub(toy_root)
+    hub.lookup("toy", {"m": 64}, "devA")
+    state = hub.__getstate__()
+    assert state["_lock"] is None and state["_materialized"] == {}
+    assert state["_warm"] is None
+    clone = pickle.loads(pickle.dumps(hub))
+    # the computed best ships; the hot path works without any re-loading
+    r = clone.lookup("toy", {"m": 64}, "devA")
+    assert r.status == "exact" and r.best_value == 1.0
+    assert clone.disk_loads == hub.disk_loads
+
+
+def test_service_package_is_parity_lint_clean():
+    from repro.analysis import lint_paths
+    result = lint_paths(["src/repro/service", "src/repro/hub"])
+    assert result.ok, [f"{f.rule}:{f.path}:{f.line}"
+                       for f in result.findings]
+
+
+# ------------------------------------------------ hub storage / facade
+def test_missing_hub_errors_instead_of_rebuilding(tmp_path):
+    from repro.hub import HubError
+    with pytest.raises(HubError, match="no hub manifest"):
+        storage.load_hub(str(tmp_path / "nope"))
+
+
+def test_sha256_verification_and_escape_hatch(toy_root):
+    from repro.hub import HubError
+    manifest = storage.read_manifest(toy_root)
+    key = "toy@devA#m=64"
+    # stale manifest: the recorded digest no longer matches the file
+    manifest["files"][key]["sha256"] = "0" * 64
+    storage.write_manifest(toy_root, manifest)
+    with pytest.raises(HubError, match="sha256 mismatch"):
+        storage.load_cache(toy_root, key)
+    with pytest.raises(HubError, match="failed verification"):
+        ConfigHub(toy_root).lookup("toy", {"m": 64}, "devA")
+    assert key in storage.verify_manifest(toy_root)
+    # the explicit escape hatch still reads the intact file as-is
+    cache = storage.load_cache(toy_root, key, verify=False)
+    assert cache.kernel == "toy"
+    r = ConfigHub(toy_root, verify=False).lookup("toy", {"m": 64}, "devA")
+    assert r.status == "exact" and r.best_value == 1.0
+
+
+def test_hub_facade_verify_and_stats(toy_root):
+    from repro.api import Hub
+    hub = Hub(toy_root)
+    assert hub.verify() == {}
+    st = hub.stats()
+    assert st["entries"] == 3 and st["kernels"] == ["toy"]
+    assert st["devices"] == ["devA", "devB"]
+    r = hub.lookup("toy", {"m": 64}, "devA")
+    assert r.status == "exact"
+    assert hub.stats()["service"]["lookups"]["exact"] == 1
+
+
+def test_default_root_is_normalized():
+    from repro.hub import DEFAULT_ROOT
+    assert ".." not in DEFAULT_ROOT
+    assert DEFAULT_ROOT == os.path.normpath(DEFAULT_ROOT)
+
+
+# ---------------------------------------------------- deprecation shims
+def test_dataset_shims_warn_and_delegate(toy_root):
+    from repro.core import dataset
+    from repro.deprecations import HubDeprecationWarning
+    with pytest.warns(HubDeprecationWarning, match="repro.hub.load_hub"):
+        old = dataset.load_hub(toy_root)
+    new = storage.load_hub(toy_root)
+    assert set(old) == set(new)  # suffixed entries are skipped identically
+    for k in old:
+        assert old[k].results == new[k].results
+
+
+def test_train_test_caches_shim_warns(toy_root):
+    from repro.core import dataset
+    from repro.deprecations import HubDeprecationWarning
+    with pytest.warns(HubDeprecationWarning):
+        train, test = dataset.train_test_caches(toy_root)
+    assert train == [] and test == []  # toy devices are in neither split
+
+
+def test_serving_import_shim_warns():
+    import importlib
+    import sys
+    from repro.deprecations import ServingMovedWarning
+    sys.modules.pop("repro.serving", None)
+    sys.modules.pop("repro.serving.engine", None)
+    with pytest.warns(ServingMovedWarning, match="repro.inference"):
+        import repro.serving  # noqa: F401
+        importlib.import_module("repro.serving.engine")
+    from repro.inference.engine import ServingEngine
+    assert sys.modules["repro.serving.engine"].ServingEngine is ServingEngine
+
+
+# ----------------------------------------------------------- CLI surface
+def test_cli_lookup_and_serve(toy_root, capsys):
+    import json
+
+    from repro.cli import main, serve_requests
+    assert main(["lookup", "--hub-root", toy_root, "--kernel", "toy",
+                 "--problem", "m=64", "--device", "devA", "--json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["status"] == "exact" and out["best_config"] == {"x": 1}
+
+    hub = ConfigHub(toy_root)
+    lines = [
+        json.dumps({"kernel": "toy", "problem": {"m": 64},
+                    "device": "devA"}),
+        json.dumps([{"kernel": "toy", "device": "devA"},
+                    {"kernel": "toy", "problem": {"m": 96},
+                     "device": "devA"}]),
+        "not json",
+        "",
+    ]
+    results = list(serve_requests(hub, lines))
+    assert [r.get("status") for r in results[:3]] == \
+        ["exact", "transfer", "transfer"]
+    assert "error" in results[3]
+
+
+def test_cli_merge_cache_registers_into_hub(toy_root, tmp_path, capsys):
+    from repro.cli import main
+    # produce one tiny costmodel recording shard via the facade
+    from repro.api import Tuner
+    out = str(tmp_path / "rec" / "ssd.json.gz")
+    with Tuner(workers=1) as tuner:
+        run = tuner.record("ssd", runner="costmodel", device="tpu_v5e",
+                           max_evals=4, out=out)
+    shard = out[:-len(".json.gz")] + ".shard-00.jsonl"
+    live = ConfigHub(toy_root)
+    assert live.lookup("ssd", None, "tpu_v5e").status == "cold"
+    merged = str(tmp_path / "rec" / "merged.json.gz")
+    assert main(["merge-cache", shard, "--out", merged,
+                 "--hub-root", toy_root]) == 0
+    assert "registered in hub" in capsys.readouterr().out
+    # the live service was invalidated and now serves the recording
+    r = live.lookup("ssd", run.cache.meta["problem"], "tpu_v5e")
+    assert r.status == "exact" and r.best_value == run.best_value

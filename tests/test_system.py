@@ -15,7 +15,7 @@ from repro.configs import get_config
 
 @pytest.fixture(scope="module")
 def hub_slice(tmp_path_factory):
-    from repro.core.dataset import build_hub, load_hub
+    from repro.hub import build_hub, load_hub
     root = str(tmp_path_factory.mktemp("hub"))
     build_hub(root, progress=lambda *_: None)
     return load_hub(root, kernels=("gemm", "hotspot"),
@@ -56,7 +56,7 @@ def test_simulation_mode_speedup(hub_slice):
 def test_train_checkpoint_serve_roundtrip(tmp_path):
     from repro.checkpoint.manager import CheckpointManager
     from repro.data.pipeline import DataConfig, TokenPipeline
-    from repro.serving.engine import Request, ServingEngine
+    from repro.inference.engine import Request, ServingEngine
     from repro.training.optimizer import OptimizerConfig
     from repro.training.train_step import (TrainConfig, init_train_state,
                                            make_train_step)
