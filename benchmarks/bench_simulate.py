@@ -51,6 +51,12 @@ on. Components:
                    as is best-config parity between the two paths.
                    Shape-miss (transfer) lookup throughput is recorded as
                    informational ``transfer_*`` extras.
+  surrogate        warmed modeled-tier lookups (``status="modeled"``: the
+                   roofline surrogate's cached argmin, a dict probe after
+                   the first call priced the space) vs re-pricing the
+                   kernel's whole valid space through ``best_modeled`` on
+                   every request. Answer parity and the tier itself are
+                   asserted outside the timed region (docs/scenarios.md).
   local_search     neighborhood-heavy local search (greedy ILS + MLS over
                    Hamming neighborhoods) as 25-repeat fused grids: the
                    recorded per-round ask streams — whole neighborhoods as
@@ -95,8 +101,9 @@ from repro.core.tunable import tunables_from_dict
 from .common import FAST
 
 BENCH_FORMAT = "repro-bench-simulate"
-BENCH_VERSION = 5  # v5: hub_lookup (ConfigHub service); v4: jax_replay
-#                         (jitted engine); v3: space_compile + local_search
+BENCH_VERSION = 6  # v6: surrogate (modeled tier); v5: hub_lookup
+#                         (ConfigHub service); v4: jax_replay (jitted
+#                         engine); v3: space_compile + local_search
 
 # the campaign component's hyperparameter set: a slice of the Table III
 # grids, small enough for CI, population-shaped so the batch step is on
@@ -609,6 +616,55 @@ def bench_hub_lookup() -> dict:
                       transfer_per_sec=HUB_LOOKUP_CALLS / w_tr)
 
 
+SURROGATE_CALLS = 100  # modeled lookups per timed pass
+
+
+def bench_surrogate() -> dict:
+    """Warmed modeled-tier lookups vs re-pricing the space per call.
+
+    vec:    ``ConfigHub.lookup`` on a triple with no recorded entry —
+            the first call prices the kernel's valid space through the
+            roofline surrogate and caches the answer per (kernel, device,
+            problem key); every later hit is a dict probe;
+    scalar: what a caller without that cache pays per request:
+            ``best_modeled`` re-prices the whole valid space (the
+            flash-attention default space) every time.
+    Answer parity (the cached best is the argmin re-pricing finds) and the
+    tier itself (``status == "modeled"`` with model provenance) are
+    asserted outside the timed region.
+    """
+    from repro.hub import DEFAULT_ROOT, hub_default_problem
+    from repro.scenarios import best_modeled
+    from repro.service import ConfigHub
+    hub = ConfigHub(DEFAULT_ROOT)
+    kernel, device = "flash_attention", "tpu_v6e"
+    # a bare lookup resolves to the hub-default shape; hand the same
+    # shape to the re-pricing side (None would mean the SMOKE shape)
+    problem = dict(hub_default_problem(kernel))
+
+    r = hub.lookup(kernel, device=device)  # warm-up, outside timed region
+    mb = best_modeled(kernel, problem, device)
+    assert r.status == "modeled" and r.model, \
+        f"surrogate: expected a modeled answer, got {r.status!r}"
+    assert (r.best_config, r.best_value) == (dict(mb.config), mb.value), \
+        "surrogate parity violation: cached answer != re-priced argmin"
+
+    def vec():
+        for _ in range(SURROGATE_CALLS):
+            hub.lookup(kernel, device=device)
+
+    def sca():
+        for _ in range(SURROGATE_CALLS):
+            best_modeled(kernel, problem, device)
+
+    w_vec, w_sca = _best_pair(vec, sca)
+    return _component(w_vec, w_sca,
+                      lookups_per_sec=SURROGATE_CALLS / w_vec,
+                      lookups_per_sec_scalar=SURROGATE_CALLS / w_sca,
+                      n_lookups=SURROGATE_CALLS, n_configs=mb.n_valid,
+                      model=mb.model, dominant=mb.dominant)
+
+
 JAX_REPLAY_RUNS = 64  # concurrent runs in the fused vmapped dispatch
 
 
@@ -700,6 +756,7 @@ def run_bench() -> dict:
                                             for s, hp in LOCAL_SEARCH_SET]},
             "jax_replay": {"runs": JAX_REPLAY_RUNS},
             "hub_lookup": {"calls": HUB_LOOKUP_CALLS},
+            "surrogate": {"calls": SURROGATE_CALLS},
         },
         "components": {
             "replay_fresh": fresh_c,
@@ -712,6 +769,7 @@ def run_bench() -> dict:
             "local_search": bench_local_search(hub),
             "jax_replay": bench_jax_replay(big),
             "hub_lookup": bench_hub_lookup(),
+            "surrogate": bench_surrogate(),
         },
     }
     comp = report["components"]

@@ -20,4 +20,5 @@ ALL_RULES = (
     protocol.StateRetainsRuntime,
     ordering.UnsortedDirectoryIteration,
     ordering.SetOrderedIteration,
+    ordering.ImportTimeEnvMutation,
 )

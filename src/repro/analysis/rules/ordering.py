@@ -13,13 +13,19 @@ from __future__ import annotations
 
 import ast
 
-from ..core import (ERROR, WARNING, Rule, call_name, is_set_expr, parent,
-                    wrapped_in_sorted)
+from ..core import (ERROR, WARNING, Rule, call_name, dotted, enclosing,
+                    is_set_expr, parent, wrapped_in_sorted)
 
 _FS_ENUMERATORS = frozenset({
     "os.listdir", "os.scandir", "glob.glob", "glob.iglob",
 })
 _PATH_METHODS = frozenset({"iterdir", "glob", "rglob"})
+
+_ENV_MUTATORS = frozenset({
+    "os.environ.setdefault", "os.environ.update", "os.environ.pop",
+    "os.environ.clear", "os.environ.popitem", "os.putenv", "os.unsetenv",
+})
+_DEF_SCOPES = (ast.FunctionDef, ast.AsyncFunctionDef)
 
 
 class UnsortedDirectoryIteration(Rule):
@@ -75,3 +81,38 @@ class SetOrderedIteration(Rule):
             if isinstance(comp, (ast.SetComp,)):
                 return
             yield self._flag(ctx, node.iter)
+
+
+class ImportTimeEnvMutation(Rule):
+    name = "ordering-import-env-mutation"
+    severity = ERROR
+    scope = ()
+    invariant = ("importing a module never mutates the process environment "
+                 "— an import-time os.environ write (e.g. XLA_FLAGS) "
+                 "changes behavior for every importer depending on import "
+                 "*order*, and jax locks some of it in at first backend "
+                 "init; environment setup belongs behind main()/CLI entry")
+    oracle = ("library importers see an unchanged environment "
+              "(launch.dryrun is importable without forcing 512 devices)")
+
+    def _module_level(self, node) -> bool:
+        return enclosing(node, *_DEF_SCOPES) is None
+
+    def visit_Assign(self, ctx, node):
+        for tgt in node.targets:
+            if (isinstance(tgt, ast.Subscript)
+                    and dotted(tgt.value) == "os.environ"
+                    and self._module_level(node)):
+                yield self.finding(
+                    ctx, node,
+                    "os.environ[...] assigned at module import time — "
+                    "move the mutation behind main()/the CLI entry point")
+                return
+
+    def visit_Call(self, ctx, node):
+        full = call_name(node)
+        if full in _ENV_MUTATORS and self._module_level(node):
+            yield self.finding(
+                ctx, node,
+                f"{full}(...) at module import time mutates the process "
+                f"environment — move it behind main()/the CLI entry point")

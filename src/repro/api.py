@@ -138,9 +138,22 @@ class Hub:
         the memoized service; returns a ``LookupResult``."""
         return self.service().lookup(kernel, problem, device)
 
+    def coverage(self, kernels: Sequence[str] | None = None,
+                 devices: Sequence[str] | None = None,
+                 with_best: bool = False):
+        """Scenario-matrix coverage of this hub: every (kernel, shape,
+        device) triple classified ``recorded | modeled | cold`` (a
+        ``repro.scenarios.CoverageReport``). ``with_best`` resolves each
+        answerable triple's best time through the service — the payload
+        the CLI report and the fleet regression gate use."""
+        from .scenarios import ScenarioMatrix
+        matrix = ScenarioMatrix(kernels=kernels, devices=devices)
+        return matrix.coverage(self.service(), with_best=with_best)
+
     def stats(self) -> dict:
         """Manifest-level summary (entries, kernels, devices, sizes) plus
-        live service counters when a service has been created."""
+        the scenario coverage matrix and live service counters when a
+        service has been created."""
         m = self.manifest
         out = {
             "root": self.root,
@@ -157,6 +170,9 @@ class Hub:
                 sum(v.values()) for v in m.get("bruteforce_hours",
                                                {}).values()), 1),
         }
+        report = self.coverage()
+        out["coverage"] = {"counts": report.counts(),
+                           "matrix": report.matrix()}
         if self._service is not None:
             out["service"] = self._service.stats()
         return out
@@ -442,11 +458,68 @@ class Tuner:
     def lookup(self, kernel: str, problem: Mapping | None = None,
                device: str = "tpu_v5e"):
         """Best known config for (kernel, problem shape, device) from the
-        recorded hub — exact hit, nearest-shape transfer, or cold; returns
-        a ``repro.service.LookupResult`` (``TuningRun``-shaped: ``mode``,
-        ``best_config``, ``best_value``, ``wall_seconds`` plus
-        status/provenance/confidence). See docs/service.md."""
+        recorded hub — exact hit, nearest-shape transfer, roofline-modeled
+        answer, or cold; returns a ``repro.service.LookupResult``
+        (``TuningRun``-shaped: ``mode``, ``best_config``, ``best_value``,
+        ``wall_seconds`` plus status/provenance/confidence). See
+        docs/service.md."""
         return self.hub.lookup(kernel, problem, device)
+
+    def surrogate(self, kernel: str, problem: Mapping | None = None,
+                  device: str = "tpu_v5e", strategy: str | None = None,
+                  hyperparams: Mapping | None = None,
+                  max_evals: int | None = None,
+                  max_seconds: float | None = None) -> TuningRun:
+        """Tune a kernel against the roofline surrogate instead of a cache
+        or live hardware (docs/scenarios.md) — any (registry kernel,
+        device model) pair works, recorded or not.
+
+        With ``strategy=None`` the whole valid space is priced and the
+        exact argmin returned (what the hub's ``modeled`` lookup tier
+        serves). With a strategy name, that strategy runs against a
+        ``SurrogateRunner`` under the given budget — the same ask/tell
+        driver path as simulation, just surrogate-priced."""
+        from .core.budget import Budget, BudgetExhausted
+        from .core.devices import DEVICES_BY_NAME
+        from .core.strategies import get_strategy
+        from .kernels import get_kernel
+        from .scenarios.surrogate import SurrogateRunner, best_modeled
+
+        t0 = time.perf_counter()
+        if strategy is None:
+            mb = best_modeled(kernel, problem, device)
+            if mb is None:
+                get_kernel(kernel)  # raise the more precise error
+                raise ValueError(
+                    f"unknown device model {device!r}; known: "
+                    f"{sorted(DEVICES_BY_NAME)}")
+            return TuningRun(mode="surrogate", strategy="exhaustive",
+                             best_config=dict(mb.config),
+                             best_value=mb.value, n_evaluated=mb.n_valid,
+                             wall_seconds=time.perf_counter() - t0)
+        spec = get_kernel(kernel)
+        dev = DEVICES_BY_NAME.get(device)
+        if dev is None:
+            raise ValueError(f"unknown device model {device!r}; known: "
+                             f"{sorted(DEVICES_BY_NAME)}")
+        problem = dict(problem or {})
+        space = spec.space(problem)
+        budget = Budget(max_seconds=max_seconds, max_evals=max_evals or 64)
+        runner = SurrogateRunner(space, spec.workload(problem), dev, budget)
+        import random
+        try:
+            get_strategy(strategy, **dict(hyperparams or {})).run(
+                space, runner, random.Random(self.seed))
+        except BudgetExhausted:
+            pass
+        best = runner.best
+        return TuningRun(
+            mode="surrogate", strategy=strategy,
+            best_config=(space.as_dict(best.config) if best else None),
+            best_value=(best.value if best else None),
+            n_evaluated=runner.fresh_evals,
+            wall_seconds=time.perf_counter() - t0,
+            simulated_seconds=budget.spent_seconds)
 
 
 def _as_journal(journal: str | CampaignJournal | None

@@ -16,13 +16,10 @@ Usage:
   PYTHONPATH=src python -m repro.autotune.perf --arch olmo-1b \
       --shape train_4k --evals 12 [--strategy greedy_ils]
 """
-import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
-
 import argparse
 import json
 import math
+import os
 import random
 import time
 
@@ -130,6 +127,11 @@ def hillclimb(arch: str, shape: str, mesh_kind: str = "single",
 
 
 def main() -> None:
+    # the dry-run cells lower against 512 host devices; set the flag only
+    # on the CLI path, before jax's first backend init — library importers
+    # must keep their 1-device view (see launch.dryrun)
+    from ..launch.dryrun import force_host_devices
+    force_host_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

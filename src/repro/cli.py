@@ -27,11 +27,19 @@ One entry point for the paper's workflow, replacing the ad-hoc scripts in
              the merge into a hub and evicts stale service index entries
   lookup     best known config for (kernel, problem shape, device) from
              the recorded hub: exact hit, nearest-shape transfer with
-             confidence, or cold (docs/service.md)
+             confidence, roofline-modeled answer, or cold
+             (docs/service.md, docs/scenarios.md)
   serve      line-oriented lookup service: JSON requests on stdin, one
              ``LookupResult`` JSON per line on stdout
+  scenarios  the scenario matrix: every (kernel × shape × device) triple
+             with its coverage tier (recorded | modeled | cold), optional
+             best times, JSON artifact output, and the recorded best-time
+             regression gate (docs/scenarios.md)
+  fleet      run/resume the recording fleet over the scenario matrix:
+             record → merge → register each runnable triple into the hub,
+             journaled so re-runs skip completed work
   hub        hub dataset management: build, info, verify (sha256 every
-             indexed file), stats
+             indexed file), stats (includes the coverage matrix)
   lint       parity-lint: static analysis of the determinism / pickle /
              f64 / protocol contracts (docs/static-analysis.md); the CI
              gate is ``python -m repro lint src/repro``
@@ -369,11 +377,16 @@ def _print_lookup(r, as_json: bool) -> None:
     if r.best_config is not None:
         val = (f"{r.best_value * 1e3:.3f} ms"
                if r.best_value not in (None, float('inf')) else "n/a")
+        kind = "modeled" if r.status == "modeled" else "recorded ok"
         print(f"  best: {r.best_config} ({val}, over {r.n_configs} "
-              f"recorded ok configs)")
+              f"{kind} configs)")
     if r.status == "transfer":
         print(f"  donor: {r.source} problem={r.donor_problem} "
               f"shape-distance {r.distance:.3f}")
+    elif r.status == "modeled" and r.model:
+        print(f"  model: {r.model['model']} on {r.model['device_model']} "
+              f"({r.model['dominant']}-bound, "
+              f"{r.model['n_ok']}/{r.model['n_valid']} configs feasible)")
     elif r.source:
         print(f"  source: {r.source}")
     print(f"  resolved in {r.wall_seconds * 1e6:.0f} us")
@@ -433,6 +446,91 @@ def cmd_serve(args) -> int:
     print(f"served {sum(stats['lookups'].values())} lookups "
           f"({stats['lookups']}); {stats['disk_loads']} cache loads",
           file=sys.stderr)
+    return 0
+
+
+def _build_matrix(args):
+    """A ``ScenarioMatrix`` from the shared --kernels/--devices CSVs."""
+    from .scenarios import ScenarioMatrix
+    return ScenarioMatrix(
+        kernels=args.kernels.split(",") if args.kernels else None,
+        devices=args.devices.split(",") if args.devices else None)
+
+
+def cmd_scenarios(args) -> int:
+    """Coverage report over the scenario matrix: every (kernel x shape x
+    device) triple with its tier, optionally best times and the recorded
+    best-time regression gate (docs/scenarios.md)."""
+    import json as _json
+
+    from .scenarios import gate_recorded
+    from .service import ConfigHub
+    matrix = _build_matrix(args)
+    hub = ConfigHub(args.hub_root or _default_hub_root(),
+                    verify=not args.no_verify)
+    with_best = args.best or bool(args.gate) or bool(args.out)
+    report = matrix.coverage(hub, with_best=with_best)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            _json.dump(report.to_json(), f, indent=1)
+            f.write("\n")
+    if args.json:
+        print(_json.dumps(report.to_json(), indent=1))
+    else:
+        for row in report.rows:
+            best = ""
+            if row.best_value is not None:
+                best = f"  {row.best_value * 1e3:.3f} ms"
+            print(f"  {row.scenario.key:58s} {row.tier:8s}{best}")
+        counts = report.counts()
+        total = sum(counts.values())
+        print(f"{total} scenarios: " + ", ".join(
+            f"{counts.get(t, 0)} {t}" for t in ("recorded", "modeled",
+                                                "cold")))
+    if args.gate:
+        with open(args.gate, "r", encoding="utf-8") as f:
+            baseline = _json.load(f)
+        base_best = {r["key"]: r["best_value"]
+                     for r in baseline.get("rows", [])
+                     if r.get("tier") == "recorded"
+                     and r.get("best_value") is not None}
+        failures = gate_recorded(report.recorded_best(), base_best,
+                                 threshold=args.threshold)
+        if failures:
+            for msg in failures:
+                print(f"  GATE {msg}")
+            print(f"{len(failures)} recorded-best regression(s) vs "
+                  f"{args.gate}")
+            return 1
+        print(f"gate ok: {len(base_best)} recorded baselines within "
+              f"{args.threshold:.0%}")
+    return 0
+
+
+def cmd_fleet(args) -> int:
+    """Run/resume the recording fleet: record -> merge -> register every
+    runnable triple of the matrix into the hub, journaled so completed
+    scenarios are skipped on re-run."""
+    import json as _json
+
+    from .scenarios import run_fleet
+    outcome = run_fleet(
+        args.hub_root or _default_hub_root(),
+        matrix=_build_matrix(args),
+        runner=args.runner, strategy=args.strategy,
+        max_evals=args.max_evals, repeats=args.repeats,
+        workers=args.workers, backend=args.backend, seed=args.seed,
+        progress=_progress(args.quiet))
+    if args.json:
+        print(_json.dumps(outcome.to_json(), indent=1))
+    else:
+        print(f"fleet: {len(outcome.recorded)} recorded, "
+              f"{len(outcome.skipped)} already journaled, "
+              f"{len(outcome.covered)} already in hub, "
+              f"{len(outcome.unrunnable)} unrunnable with "
+              f"runner={args.runner}")
+        for key in outcome.recorded:
+            print(f"  recorded {key}")
     return 0
 
 
@@ -599,14 +697,18 @@ def build_parser() -> argparse.ArgumentParser:
         pp.add_argument("--kernel", required=True,
                         help="registered kernel (gemm, convolution, "
                              "dedispersion, hotspot, flash_attention, ssd)")
-        pp.add_argument("--runner", choices=("live", "costmodel"),
+        pp.add_argument("--runner", choices=("live", "costmodel",
+                                             "surrogate"),
                         default=("costmodel" if bruteforce else "live"),
                         help="live = Pallas interpret mode on this host; "
-                             "costmodel = analytic device model")
+                             "costmodel = analytic device model; surrogate "
+                             "= deterministic roofline pricing "
+                             "(docs/scenarios.md)")
         pp.add_argument("--device",
                         default=("tpu_v5e" if bruteforce else "cpu_interpret"),
-                        help="device model for --runner costmodel; a label "
-                             "recorded in the cache otherwise")
+                        help="device model for --runner costmodel/"
+                             "surrogate; a label recorded in the cache "
+                             "otherwise")
         pp.add_argument("--problem", default=None, metavar="K=V,...",
                         help="problem-size overrides (e.g. m=256,n=256,"
                              "k=256); default: the kernel's smoke sizes")
@@ -696,6 +798,62 @@ def build_parser() -> argparse.ArgumentParser:
     psv.add_argument("--warm-up", action="store_true",
                      help="materialize every hub entry before serving")
     psv.set_defaults(fn=cmd_serve)
+
+    psc = sub.add_parser("scenarios", help="coverage over the scenario "
+                         "matrix: every (kernel x shape x device) triple, "
+                         "recorded | modeled | cold")
+    psc.add_argument("--kernels", default=None,
+                     help="comma-separated kernels (default: all registered)")
+    psc.add_argument("--devices", default=None,
+                     help="comma-separated devices (default: hub devices "
+                          "+ cpu_interpret)")
+    psc.add_argument("--hub-root", default=None, metavar="DIR",
+                     help="hub directory (default: the bundled hub)")
+    psc.add_argument("--no-verify", action="store_true",
+                     help="skip sha256 verification of hub entries")
+    psc.add_argument("--best", action="store_true",
+                     help="resolve and show the best time per triple")
+    psc.add_argument("--json", action="store_true",
+                     help="print the coverage report as JSON")
+    psc.add_argument("--out", default=None, metavar="PATH",
+                     help="also write the JSON report to PATH (the CI "
+                          "artifact / gate baseline)")
+    psc.add_argument("--gate", default=None, metavar="BASELINE",
+                     help="fail if any recorded best time regressed vs "
+                          "this earlier coverage JSON")
+    psc.add_argument("--threshold", type=float, default=0.2,
+                     help="allowed recorded-best slowdown for --gate "
+                          "(default 0.2 = 20%%)")
+    psc.set_defaults(fn=cmd_scenarios)
+
+    pfl = sub.add_parser("fleet", help="run/resume the recording fleet "
+                         "over the scenario matrix (journaled)")
+    pfl.add_argument("--kernels", default=None,
+                     help="comma-separated kernels (default: all registered)")
+    pfl.add_argument("--devices", default=None,
+                     help="comma-separated devices (default: hub devices "
+                          "+ cpu_interpret)")
+    pfl.add_argument("--hub-root", default=None, metavar="DIR",
+                     help="hub directory to register into (default: the "
+                          "bundled hub)")
+    pfl.add_argument("--runner", choices=("live", "costmodel", "surrogate"),
+                     default="costmodel",
+                     help="recorder per triple (live runs cpu_interpret "
+                          "scenarios only; default costmodel)")
+    pfl.add_argument("--strategy", default="random_search",
+                     choices=sorted(STRATEGIES))
+    pfl.add_argument("--max-evals", type=int, default=64,
+                     help="fresh-evaluation cap per scenario (default 64)")
+    pfl.add_argument("--repeats", type=int, default=3,
+                     help="observations per fresh evaluation (default 3)")
+    pfl.add_argument("--workers", type=int, default=1)
+    pfl.add_argument("--backend", choices=("auto", "thread", "process"),
+                     default="auto")
+    pfl.add_argument("--seed", type=int, default=0)
+    pfl.add_argument("--json", action="store_true",
+                     help="print the fleet outcome as JSON")
+    pfl.add_argument("--quiet", action="store_true")
+    pfl.set_defaults(fn=cmd_fleet)
 
     phub = sub.add_parser("hub", help="hub dataset management: build, "
                           "info, verify (sha256), stats")

@@ -287,6 +287,18 @@ class RecordSpec:
             spec = self.kernel_spec()
             return CostModelRunner(space, spec.workload(self.problem_dict),
                                    device, budget)
+        if self.runner == "surrogate":
+            try:
+                device = DEVICES_BY_NAME[self.device]
+            except KeyError:
+                raise ValueError(
+                    f"unknown device model {self.device!r}; known: "
+                    f"{sorted(DEVICES_BY_NAME)}")
+            # late: scenarios sits above core in the layer diagram
+            from ..scenarios.surrogate import SurrogateRunner
+            spec = self.kernel_spec()
+            return SurrogateRunner(space, spec.workload(self.problem_dict),
+                                   device, budget)
         raise ValueError(f"unknown runner kind {self.runner!r}")
 
     def shard_header(self, space: SearchSpace, worker: int,

@@ -7,12 +7,14 @@ CLI entry point.
 """
 from .storage import (DEFAULT_ROOT, HUB_VERSION, HubError, build_hub,
                       entry_key, hub_default_problem, load_cache, load_hub,
-                      problem_key, read_manifest, register_cache, split_key,
+                      problem_key, read_manifest,
+                      record_framework_smoke, register_cache, split_key,
                       train_test_caches, verify_manifest, write_manifest)
 
 __all__ = [
     "DEFAULT_ROOT", "HUB_VERSION", "HubError", "build_hub", "entry_key",
     "hub_default_problem", "load_cache", "load_hub", "problem_key",
-    "read_manifest", "register_cache", "split_key", "train_test_caches",
+    "read_manifest", "record_framework_smoke", "register_cache",
+    "split_key", "train_test_caches",
     "verify_manifest", "write_manifest",
 ]

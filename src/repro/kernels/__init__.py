@@ -12,6 +12,15 @@ interpret-mode objective the recorder (``core.record``) can measure.
 resolves kernels through: every registered kernel is a simulation scenario —
 record it once (live on CPU/device or via a cost model), then replay the
 cache through thousands of hypertuning campaigns.
+
+The ``HUB_KERNELS``/``FRAMEWORK_KERNELS`` tiers only say how each kernel's
+hub data is *produced*: hub-tier spaces are brute-forced across all six
+device models by ``build_hub``; framework-tier kernels enter the hub as
+recorded campaigns (their committed ``SMOKE_PROBLEM`` interpret-mode
+entries, plus whatever the scenario fleet records). All six are equally
+first-class to lookup — any (kernel, shape, device) triple the hub lacks
+a measurement for is served by the roofline surrogate
+(``repro.scenarios``).
 """
 from __future__ import annotations
 

@@ -1,21 +1,24 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run (deliverable e).
 
 Lowers + compiles every (architecture × input shape × mesh) cell from
 ShapeDtypeStructs — no allocation — and records memory_analysis(),
 cost_analysis() and the collective schedule for the roofline analysis.
 
-The XLA_FLAGS line above MUST precede every other import (jax locks the
-device count at first init); do not set it globally — smoke tests and
-benches see 1 device.
+``main()`` starts by forcing 512 host devices via ``XLA_FLAGS`` — that
+must happen before jax initializes a backend (jax locks the device count
+at first init), which holds for the CLI entry because importing jax does
+not initialize one. It must NOT happen at module import: this module is a
+library too (``cost_analysis_dict`` feeds the scenario surrogate), and an
+importing process — smoke tests, benches, the service — must keep seeing
+1 device. ``parity-lint``'s ``ordering-import-env-mutation`` rule
+enforces the distinction repo-wide.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
       --mesh both --out experiments/dryrun
 """
 import argparse
+import os
 import json
 import time
 import traceback
@@ -213,7 +216,14 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str, *,
     return rec
 
 
+def force_host_devices(n: int = 512) -> None:
+    """Point XLA at ``n`` host platform devices — CLI entry points only,
+    and only before jax's first backend init."""
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+
+
 def main() -> None:
+    force_host_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")

@@ -1,0 +1,27 @@
+"""Scenario subsystem: every (kernel, shape, device) triple answerable.
+
+Three pieces (docs/scenarios.md):
+
+* ``matrix`` — ``ScenarioMatrix``, the registry of (kernel × problem
+  shape × device) triples with per-triple provenance
+  (``recorded | modeled | cold``) and the recorded best-time gate;
+* ``surrogate`` — the deterministic roofline pricing model,
+  ``SurrogateRunner`` (a strategy-compatible ``BatchRunner``), and
+  ``best_modeled`` (the argmin the hub's ``modeled`` lookup tier serves);
+* ``fleet`` — the journaled recording campaign that walks the matrix and
+  registers results into the hub.
+"""
+from .fleet import FleetOutcome, run_fleet, runnable
+from .matrix import (CoverageReport, CoverageRow, Scenario, ScenarioMatrix,
+                     gate_recorded, kernel_shapes)
+from .surrogate import (MODEL_NAME, MODELED_CONFIDENCE, ModeledBest,
+                        SurrogatePrice, SurrogateRunner, best_modeled,
+                        facts_from_compiled, price, price_from_facts)
+
+__all__ = [
+    "CoverageReport", "CoverageRow", "FleetOutcome", "MODELED_CONFIDENCE",
+    "MODEL_NAME", "ModeledBest", "Scenario", "ScenarioMatrix",
+    "SurrogatePrice", "SurrogateRunner", "best_modeled",
+    "facts_from_compiled", "gate_recorded", "kernel_shapes", "price",
+    "price_from_facts", "run_fleet", "runnable",
+]

@@ -15,7 +15,20 @@ configuration:
     ``warm_start=True`` a journaled recording campaign is launched exactly
     once per cold key (single-flight, ``service.warmstart``) and the
     incumbent best is served while results stream in;
-  * **cold** — nothing recorded and no warm-start: ``best_config=None``.
+  * **modeled** — no measurement worth serving (no donor, or only a donor
+    whose transfer confidence falls below
+    ``scenarios.surrogate.MODELED_CONFIDENCE``), but the kernel and device
+    are modelable: the roofline surrogate's argmin over the valid space
+    answers, with fixed confidence ``MODELED_CONFIDENCE`` and ``model``
+    provenance. Computed once per (kernel, device, shape), then a dict
+    probe;
+  * **cold** — nothing recorded, not modelable, no warm-start:
+    ``best_config=None``.
+
+Tier order is confidence order: exact (1.0) beats a near-shape transfer
+(``1/(1+d)``), which beats modeled (0.3), which beats a far-shape or
+cross-device transfer (held as a last resort ahead of cold), which beats
+cold (0.0).
 
 Freshness: ``invalidate()`` drops materialized state and re-reads the
 manifest (``merge-cache --hub-root`` and warm-start completion route
@@ -56,6 +69,13 @@ def notify_cache_merged(root: str | None = None, kernel: str | None = None,
     return n
 
 
+def _modeled_confidence() -> float:
+    # lazy: repro.scenarios imports the api facade, which imports this
+    # module — only method bodies may cross that boundary
+    from ..scenarios.surrogate import MODELED_CONFIDENCE
+    return MODELED_CONFIDENCE
+
+
 @dataclasses.dataclass(frozen=True)
 class LookupResult:
     """One service answer, ``TuningRun``-shaped (headline fields + enough
@@ -64,7 +84,7 @@ class LookupResult:
     kernel: str
     device: str
     problem: dict
-    status: str                      # exact | transfer | warming | warm | cold
+    status: str          # exact | transfer | warming | warm | modeled | cold
     best_config: dict | None = None
     best_value: float | None = None  # objective seconds of best_config
     confidence: float = 0.0          # 1.0 exact; see service.transfer
@@ -74,13 +94,21 @@ class LookupResult:
     n_configs: int = 0               # recorded configs behind the answer
     wall_seconds: float = 0.0
     mode: str = "lookup"
+    model: dict | None = None        # modeled: surrogate provenance
 
     @property
     def found(self) -> bool:
         return self.best_config is not None
 
+    @property
+    def tier(self) -> str:
+        """The coverage tier this answer belongs to: ``warming``/``warm``
+        collapse to ``warm``; every other status is its own tier."""
+        return "warm" if self.status in ("warming", "warm") else self.status
+
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
+        d["tier"] = self.tier
         if self.best_value is not None and self.best_value == float("inf"):
             d["best_value"] = None
         return d
@@ -133,7 +161,9 @@ class ConfigHub:
         self._best: dict[tuple, tuple] = {}     # key -> (config, value, n_ok)
         self._materialized: dict[tuple, object] = {}  # key -> CacheColumns
         self._stamp: dict[tuple, tuple] = {}    # key -> (mono, mtime_ns, size)
-        self._counters = {"exact": 0, "transfer": 0, "warm": 0, "cold": 0}
+        self._modeled: dict[tuple, object] = {}  # key -> ModeledBest | None
+        self._counters = {"exact": 0, "transfer": 0, "warm": 0,
+                          "modeled": 0, "cold": 0}
         self._warm = None
         if warm_start:
             from .warmstart import WarmStartManager
@@ -173,7 +203,8 @@ class ConfigHub:
             def hit(k: tuple) -> bool:
                 return ((kernel is None or k[0] == kernel)
                         and (device is None or k[1] == device))
-            for store in (self._best, self._materialized, self._stamp):
+            for store in (self._best, self._materialized, self._stamp,
+                          self._modeled):
                 for k in [k for k in store if hit(k)]:
                     del store[k]
         self._reload_index()
@@ -255,6 +286,7 @@ class ConfigHub:
                     status="exact", best_config=config, best_value=value,
                     confidence=1.0, source=entry.key, n_configs=n_ok,
                     wall_seconds=time.perf_counter() - t0)
+        transfer_res = None
         donor = self._nearest_donor(kernel, device, target, exclude=ikey)
         if donor is not None:
             d_entry, dist = donor
@@ -262,27 +294,77 @@ class ConfigHub:
                 (d_entry.kernel, d_entry.device, d_entry.pkey))
             if config is not None:
                 cross = d_entry.device != device
-                with self._lock:
-                    self._counters["transfer"] += 1
-                return LookupResult(
+                confidence = transfer_confidence(dist, cross)
+                transfer_res = LookupResult(
                     kernel=kernel, device=device, problem=target,
                     status="transfer", best_config=config, best_value=value,
-                    confidence=transfer_confidence(dist, cross),
+                    confidence=confidence,
                     source=d_entry.key, donor_problem=dict(d_entry.problem),
                     distance=dist, n_configs=n_ok,
                     wall_seconds=time.perf_counter() - t0)
-        if self._warm is not None and self._warm.can_serve(kernel, device):
-            result = self._warm.serve(kernel, device, target)
-            if result is not None:
-                with self._lock:
-                    self._counters["warm"] += 1
-                return dataclasses.replace(
-                    result, wall_seconds=time.perf_counter() - t0)
+                # a near-shape donor outranks the surrogate; a far-shape or
+                # cross-device one is held back and only serves if the
+                # surrogate can't answer either
+                if (confidence >= _modeled_confidence()
+                        or not self._modelable(kernel, device)):
+                    with self._lock:
+                        self._counters["transfer"] += 1
+                    return transfer_res
+        if transfer_res is None:
+            if self._warm is not None and self._warm.can_serve(kernel,
+                                                               device):
+                result = self._warm.serve(kernel, device, target)
+                if result is not None:
+                    with self._lock:
+                        self._counters["warm"] += 1
+                    return dataclasses.replace(
+                        result, wall_seconds=time.perf_counter() - t0)
+        modeled = self._modeled_best(kernel, device, target)
+        if modeled is not None:
+            with self._lock:
+                self._counters["modeled"] += 1
+            return LookupResult(
+                kernel=kernel, device=device, problem=target,
+                status="modeled", best_config=dict(modeled.config),
+                best_value=modeled.value,
+                confidence=_modeled_confidence(),
+                n_configs=modeled.n_ok, model=modeled.provenance(),
+                wall_seconds=time.perf_counter() - t0)
+        if transfer_res is not None:
+            with self._lock:
+                self._counters["transfer"] += 1
+            return dataclasses.replace(
+                transfer_res, wall_seconds=time.perf_counter() - t0)
         with self._lock:
             self._counters["cold"] += 1
         return LookupResult(kernel=kernel, device=device, problem=target,
                             status="cold",
                             wall_seconds=time.perf_counter() - t0)
+
+    # ---------------------------------------------------------- modeled tier
+    @staticmethod
+    def _modelable(kernel: str, device: str) -> bool:
+        """Can the roofline surrogate answer for this (kernel, device)?"""
+        from ..core.devices import DEVICES_BY_NAME
+        from ..kernels import KERNELS
+        return kernel in KERNELS and device in DEVICES_BY_NAME
+
+    def _modeled_best(self, kernel: str, device: str, target: Mapping):
+        """The surrogate argmin for one triple, computed once and then a
+        dict probe (``ModeledBest`` is plain data, so it ships to workers
+        with the rest of the pickled state)."""
+        key = (kernel, device, storage.problem_key(target))
+        with self._lock:
+            if key in self._modeled:
+                return self._modeled[key]
+        if not self._modelable(kernel, device):
+            best = None
+        else:
+            from ..scenarios.surrogate import best_modeled
+            best = best_modeled(kernel, target, device)
+        with self._lock:
+            self._modeled[key] = best
+        return best
 
     def _nearest_donor(self, kernel: str, device: str, target: Mapping,
                        exclude: tuple) -> tuple[_Entry, float] | None:
@@ -322,6 +404,13 @@ class ConfigHub:
             n += 1
         return n
 
+    def recorded_keys(self) -> frozenset:
+        """The (kernel, device, problem_key) triples backed by a measured
+        entry (``n_ok > 0``) — what the scenario matrix classifies as
+        ``recorded`` coverage."""
+        with self._lock:
+            return frozenset(k for k, e in self._index.items() if e.n_ok > 0)
+
     def stats(self) -> dict:
         with self._lock:
             return {
@@ -330,6 +419,7 @@ class ConfigHub:
                 "kernels": sorted({e.kernel for e in self._index.values()}),
                 "devices": sorted({e.device for e in self._index.values()}),
                 "materialized": len(self._best),
+                "modeled_cached": len(self._modeled),
                 "disk_loads": self.disk_loads,
                 "lookups": dict(self._counters),
                 "warm_campaigns": (self._warm.launches

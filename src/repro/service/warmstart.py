@@ -100,11 +100,12 @@ class WarmStartManager:
 
     def can_serve(self, kernel: str, device: str) -> bool:
         """Warm-start needs a registered kernel (to rebuild its space) and
-        a known device model (for the cost-model runner)."""
+        a known device model (for the model-backed runners)."""
         from ..core.devices import DEVICES_BY_NAME
         from ..kernels import KERNELS
-        return kernel in KERNELS and (self.runner != "costmodel"
-                                      or device in DEVICES_BY_NAME)
+        return kernel in KERNELS and (
+            self.runner not in ("costmodel", "surrogate")
+            or device in DEVICES_BY_NAME)
 
     def ensure(self, kernel: str, device: str,
                problem: Mapping | None) -> WarmStartFlight:

@@ -270,6 +270,35 @@ class TestOrderingRules:
                 journal.append(key)
         """) == []
 
+    def test_import_time_environ_assign_triggers(self):
+        out = lint("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        """, path="launch/dryrun.py")
+        assert rule_names(out) == ["ordering-import-env-mutation"]
+        assert out[0].severity == ERROR
+
+    def test_import_time_environ_setdefault_triggers(self):
+        out = lint("""
+            import os
+            os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        """, path="models/mlp.py")
+        assert rule_names(out) == ["ordering-import-env-mutation"]
+
+    def test_env_mutation_inside_function_passes(self):
+        assert lint("""
+            import os
+            def main():
+                os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+                os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        """, path="launch/dryrun.py") == []
+
+    def test_import_time_environ_read_passes(self):
+        assert lint("""
+            import os
+            FAST = os.environ.get("REPRO_FAST") == "1"
+        """) == []
+
 
 # ------------------------------------------------ suppressions & baseline
 class TestSuppression:

@@ -343,7 +343,9 @@ def test_cli_merge_cache_registers_into_hub(toy_root, tmp_path, capsys):
                            max_evals=4, out=out)
     shard = out[:-len(".json.gz")] + ".shard-00.jsonl"
     live = ConfigHub(toy_root)
-    assert live.lookup("ssd", None, "tpu_v5e").status == "cold"
+    # nothing recorded for ssd in the toy hub: the roofline surrogate
+    # answers (modeled tier) until the recording below is registered
+    assert live.lookup("ssd", None, "tpu_v5e").status == "modeled"
     merged = str(tmp_path / "rec" / "merged.json.gz")
     assert main(["merge-cache", shard, "--out", merged,
                  "--hub-root", toy_root]) == 0
