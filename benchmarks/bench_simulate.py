@@ -41,6 +41,19 @@ on. Components:
                    the timed region; the jit compile is warmed outside it
                    too. Skipped (not failed) when no jax backend can
                    dispatch — the committed baseline is recorded with one.
+  fused_campaign   whole tuning campaigns on the device-resident fused
+                   executor (``core.engine_jax.campaign.drive_fused``,
+                   scores-only ``materialize=False`` consumption) vs the
+                   scalar per-evaluation campaign loop, on the
+                   statically-drawable tier (random-search runs whose
+                   single ask pre-draws the whole row permutation, so the
+                   ratio isolates the campaign loop rather than shared
+                   host strategy stepping). Per-run improvements, fresh
+                   evals, and budget spends are asserted bit-identical to
+                   the numpy oracle outside the timed region. Skipped
+                   (not failed) without a jax backend; the committed
+                   baseline is recorded with one, and CI floors the
+                   ratio at 10x (``check_regression.py``).
   hub_lookup       warmed ``service.ConfigHub`` exact-hit lookups (a dict
                    probe of the precomputed per-entry best) vs the naive
                    answer path a caller without the service pays per call:
@@ -89,7 +102,7 @@ import numpy as np
 
 from repro.core.budget import Budget, BudgetExhausted
 from repro.core.cache import CachedResult, CacheFile
-from repro.core.driver import SearchDriver
+from repro.core.driver import SearchDriver, drive_many
 from repro.core.methodology import (_repeat_rng, evaluate_strategy,
                                     make_scorer)
 from repro.core.runner import SimulationRunner, run_fused
@@ -101,7 +114,8 @@ from repro.core.tunable import tunables_from_dict
 from .common import FAST
 
 BENCH_FORMAT = "repro-bench-simulate"
-BENCH_VERSION = 6  # v6: surrogate (modeled tier); v5: hub_lookup
+BENCH_VERSION = 7  # v7: fused_campaign (device-resident campaigns);
+#                         v6: surrogate (modeled tier); v5: hub_lookup
 #                         (ConfigHub service); v4: jax_replay (jitted
 #                         engine); v3: space_compile + local_search
 
@@ -165,7 +179,13 @@ class _gc_paused:
             gc.enable()
 
 
+# --repeat N on the CLI: every component's best-of window, overridden in
+# one place (None = each component's own default)
+_REPEAT_OVERRIDE: "int | None" = None
+
+
 def _best_of(fn, repeat: int = 5) -> float:
+    repeat = _REPEAT_OVERRIDE or repeat
     best = float("inf")
     with _gc_paused():
         for _ in range(repeat):
@@ -181,6 +201,7 @@ def _best_pair(fn_vec, fn_sca, repeat: int = 5) -> tuple:
     slowdowns come in multi-second patches, and sampling both engines
     across the same patches keeps their ratio — what CI gates on — honest
     even when absolute walls wander."""
+    repeat = _REPEAT_OVERRIDE or repeat
     best_v = best_s = float("inf")
     with _gc_paused():
         for _ in range(repeat):
@@ -735,10 +756,137 @@ def bench_jax_replay(cache: CacheFile) -> dict:
                       backend=engine_jax.backend_name())
 
 
-def run_bench() -> dict:
+FUSED_CAMPAIGN_RUNS = 4  # seeds per space in the fused-campaign grid
+
+
+def bench_fused_campaign() -> dict:
+    """Whole tuning campaigns on the device-resident fused executor vs
+    the scalar per-evaluation campaign loop.
+
+    The workload is the statically-drawable tier — random-search runs
+    that pre-draw their whole row permutation in one ask, so neither side
+    pays per-generation strategy stepping and the ratio isolates the
+    campaign loop itself: per-evaluation Python resolution (scalar
+    ``drive_many``) vs a handful of vmapped replay dispatches plus
+    array-native improvement extraction (``drive_fused`` with
+    ``materialize=False``, the scores-only consumption ``methodology``
+    uses). Population strategies (GA/PSO/DE) are deliberately absent:
+    their host ask/tell stepping is shared by both sides and bounds the
+    end-to-end ratio near 1x (see docs/performance.md, "host↔device
+    round-trip budget") — the ``campaign`` component already covers that
+    regime end to end.
+
+    Parity is asserted outside the timed region: every fused run's
+    improvement step function, fresh-eval count, and committed budget
+    spend must equal the numpy engine's ``drive_many`` result
+    bit-for-bit. Skipped (not failed) without a jax backend.
+    """
+    from repro.core import engine_jax
+    if not engine_jax.engine_available():
+        return {"skipped": True,
+                "reason": engine_jax.unavailable_reason()}
+    caches = _hub_caches() + [_small_cache()]
+    for c in caches:
+        c.columns  # mirrors + compiled spaces built outside timed region
+        c.space.compiled
+    n_evals = sum(c.space.compiled.n_valid
+                  for c in caches) * FUSED_CAMPAIGN_RUNS
+
+    def _drivers():
+        ds = []
+        for c in caches:
+            for r in range(FUSED_CAMPAIGN_RUNS):
+                runner = SimulationRunner(c, Budget(max_seconds=1e9))
+                ds.append(SearchDriver(get_strategy("random_search"),
+                                       c.space, runner,
+                                       random.Random(1000 + r)))
+        return ds
+
+    def fused_side():
+        drivers = _drivers()
+        for d in drivers:
+            d.runner.engine = "jax"
+        engine_jax.drive_fused(drivers, materialize=False)
+
+    def scalar_side():
+        drive_many(_drivers(), engine="scalar")
+
+    # parity outside the timed region (also warms the jit dispatches):
+    # fused improvements == the numpy oracle's sequential improvement scan
+    ref = _drivers()
+    drive_many(ref, engine="numpy")
+    dev = _drivers()
+    for d in dev:
+        d.runner.engine = "jax"
+    runs = engine_jax.drive_fused(dev, materialize=False)
+    for r, run in zip(ref, runs):
+        ts, bs = run.improvements()
+        best, rts, rbs = float("inf"), [], []
+        for t, v, _cfg in r.runner.trace:
+            if v < best:
+                best = v
+                rts.append(t)
+                rbs.append(v)
+        assert np.array_equal(ts, np.asarray(rts)) \
+            and np.array_equal(bs, np.asarray(rbs)), \
+            "fused_campaign parity violation: improvements diverged"
+        assert run.fresh_evals == r.runner.fresh_evals \
+            and run.spent == r.runner.budget.spent_seconds, \
+            "fused_campaign parity violation: spends diverged"
+
+    w_fused, w_scalar = _best_pair(fused_side, scalar_side, repeat=3)
+    return _component(w_fused, w_scalar,
+                      evals_per_sec=n_evals / w_fused,
+                      evals_per_sec_scalar=n_evals / w_scalar,
+                      n_evals=n_evals,
+                      n_runs=len(caches) * FUSED_CAMPAIGN_RUNS,
+                      reference="scalar",
+                      backend=engine_jax.backend_name())
+
+
+ALL_COMPONENTS = ("replay_fresh", "replay_revisit", "score_trace",
+                  "baseline_small", "campaign", "drive_many",
+                  "space_compile", "local_search", "jax_replay",
+                  "fused_campaign", "hub_lookup", "surrogate")
+
+
+def run_bench(components: "list[str] | None" = None) -> dict:
+    """The full report, or — ``components`` given — just those components
+    (``--component`` on the CLI: iterate on one ratio without paying for
+    the whole profile). A filtered report is for humans; the committed
+    baseline the CI gate compares against is always the full run."""
+    if components:
+        unknown = sorted(set(components) - set(ALL_COMPONENTS))
+        if unknown:
+            raise ValueError(f"unknown bench components {unknown}; "
+                             f"known: {list(ALL_COMPONENTS)}")
+        selected = [c for c in ALL_COMPONENTS if c in set(components)]
+    else:
+        selected = list(ALL_COMPONENTS)
     hub = _hub_caches()
     big = hub[0]  # gemm@tpu_v5e: the largest hub space
-    fresh_c, revisit_c = bench_replay(big)
+    comp: dict = {}
+    if {"replay_fresh", "replay_revisit"} & set(selected):
+        fresh_c, revisit_c = bench_replay(big)  # shares one cache build
+        if "replay_fresh" in selected:
+            comp["replay_fresh"] = fresh_c
+        if "replay_revisit" in selected:
+            comp["replay_revisit"] = revisit_c
+    makers = {
+        "score_trace": lambda: bench_score_trace(big),
+        "baseline_small": bench_baseline_small,
+        "campaign": bench_campaign,
+        "drive_many": lambda: bench_drive_many(hub),
+        "space_compile": lambda: bench_space_compile(hub),
+        "local_search": lambda: bench_local_search(hub),
+        "jax_replay": lambda: bench_jax_replay(big),
+        "fused_campaign": bench_fused_campaign,
+        "hub_lookup": bench_hub_lookup,
+        "surrogate": bench_surrogate,
+    }
+    for name in selected:
+        if name not in comp:
+            comp[name] = makers[name]()
     report = {
         "format": BENCH_FORMAT,
         "version": BENCH_VERSION,
@@ -755,35 +903,36 @@ def run_bench() -> dict:
                              "strategies": [f"{s}:{sorted(hp.items())}"
                                             for s, hp in LOCAL_SEARCH_SET]},
             "jax_replay": {"runs": JAX_REPLAY_RUNS},
+            "fused_campaign": {"runs_per_space": FUSED_CAMPAIGN_RUNS},
             "hub_lookup": {"calls": HUB_LOOKUP_CALLS},
             "surrogate": {"calls": SURROGATE_CALLS},
         },
-        "components": {
-            "replay_fresh": fresh_c,
-            "replay_revisit": revisit_c,
-            "score_trace": bench_score_trace(big),
-            "baseline_small": bench_baseline_small(),
-            "campaign": bench_campaign(),
-            "drive_many": bench_drive_many(hub),
-            "space_compile": bench_space_compile(hub),
-            "local_search": bench_local_search(hub),
-            "jax_replay": bench_jax_replay(big),
-            "hub_lookup": bench_hub_lookup(),
-            "surrogate": bench_surrogate(),
-        },
+        "components": comp,
     }
-    comp = report["components"]
-    report["score_checksum"] = comp["campaign"]["score_checksum"]
-    report["evals_per_sec"] = comp["replay_fresh"]["evals_per_sec"]
+    if "campaign" in comp:
+        report["score_checksum"] = comp["campaign"]["score_checksum"]
+    if "replay_fresh" in comp:
+        report["evals_per_sec"] = comp["replay_fresh"]["evals_per_sec"]
     # headline: geometric mean of the per-component engine speedups
     # (skipped components — jax_replay without a backend — stay out)
     speedups = [c["speedup"] for c in comp.values() if "speedup" in c]
-    report["speedup_geomean"] = float(np.exp(np.mean(np.log(speedups))))
+    if speedups:
+        report["speedup_geomean"] = float(np.exp(np.mean(np.log(speedups))))
     return report
 
 
-def main(json_out: str | None = None) -> dict:
-    report = run_bench()
+def main(json_out: str | None = None,
+         components: "list[str] | None" = None,
+         repeat: "int | None" = None) -> dict:
+    global _REPEAT_OVERRIDE
+    if repeat is not None:
+        if repeat < 1:
+            raise ValueError(f"--repeat must be >= 1, got {repeat}")
+        _REPEAT_OVERRIDE = repeat
+    try:
+        report = run_bench(components)
+    finally:
+        _REPEAT_OVERRIDE = None
     comp = report["components"]
     print(f"{'component':16s} "
           f"{'vectorized':>12s} {'scalar':>12s} {'speedup':>8s}")
@@ -793,13 +942,23 @@ def main(json_out: str | None = None) -> dict:
             continue
         print(f"{name:16s} {c['wall_s']*1e3:10.1f}ms {c['wall_s_scalar']*1e3:10.1f}ms "
               f"{c['speedup']:7.2f}x")
-    print(f"replay throughput: {comp['replay_fresh']['evals_per_sec']:,.0f} "
-          f"fresh evals/s, {comp['replay_revisit']['evals_per_sec']:,.0f} "
-          f"revisits/s")
-    print(f"campaign: {comp['campaign']['evals_per_sec']:,.0f} fresh evals/s "
-          f"({comp['campaign']['fresh_evals']} evals)")
-    print(f"geomean engine speedup: {report['speedup_geomean']:.2f}x")
-    print(f"score checksum: {report['score_checksum'][:16]}…")
+    if "replay_fresh" in comp and "replay_revisit" in comp:
+        print(f"replay throughput: "
+              f"{comp['replay_fresh']['evals_per_sec']:,.0f} "
+              f"fresh evals/s, {comp['replay_revisit']['evals_per_sec']:,.0f} "
+              f"revisits/s")
+    if "campaign" in comp:
+        print(f"campaign: {comp['campaign']['evals_per_sec']:,.0f} "
+              f"fresh evals/s ({comp['campaign']['fresh_evals']} evals)")
+    if not comp.get("fused_campaign", {"skipped": True}).get("skipped"):
+        print(f"fused campaign: "
+              f"{comp['fused_campaign']['evals_per_sec']:,.0f} fresh "
+              f"evals/s ({comp['fused_campaign']['n_evals']} evals, "
+              f"{comp['fused_campaign']['speedup']:.1f}x over scalar)")
+    if "speedup_geomean" in report:
+        print(f"geomean engine speedup: {report['speedup_geomean']:.2f}x")
+    if "score_checksum" in report:
+        print(f"score checksum: {report['score_checksum'][:16]}…")
     if json_out:
         with open(json_out, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)

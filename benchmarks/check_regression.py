@@ -62,9 +62,16 @@ MIN_SPEEDUP = 0.9
 # whole valid space per call (committed baseline ~10x on the 50-config
 # flash-attention space; the margin absorbs hosts where pure-Python
 # pricing is relatively faster).
+# fused_campaign pins the device-resident campaign claim: whole
+# random-search campaigns through drive_fused (vmapped replay dispatches
+# + array-native improvement extraction, materialize=False) are ≥10x the
+# scalar per-evaluation campaign loop — the hard floor *is* the claim
+# (committed baseline ~14x, >1M fresh evals/s on CPU; see
+# docs/performance.md "host↔device round-trip budget").
 COMPONENT_MIN = {"drive_many": 1.8, "local_search": 2.0,
                  "space_compile": 5.0, "jax_replay": 10.0,
-                 "hub_lookup": 20.0, "surrogate": 5.0}
+                 "hub_lookup": 20.0, "surrogate": 5.0,
+                 "fused_campaign": 10.0}
 
 
 def _unusable(msg: str) -> SystemExit:

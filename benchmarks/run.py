@@ -17,7 +17,13 @@
             report the CI regression gate consumes (BENCH_simulate.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--workers N] [--json OUT]
-                                               [names...]
+                                               [--component NAME]...
+                                               [--repeat N] [names...]
+
+``--component NAME`` (repeatable) and ``--repeat N`` narrow the ``bench``
+profile to named components / a fixed best-of window — for iterating on
+one gated ratio (e.g. ``bench --component fused_campaign --repeat 3``)
+without paying for the full profile.
 Set REPRO_FAST=1 for a reduced-repeats smoke pass.
 
 Campaigns are journaled under ``experiments/hypertune/`` and resume if
@@ -42,6 +48,14 @@ def main() -> None:
                     help="write the machine-readable report of benchmarks "
                          "that produce one (currently: bench) to OUT — the "
                          "same entry point the CI regression gate uses")
+    ap.add_argument("--component", action="append", default=None,
+                    metavar="NAME",
+                    help="bench only: run just this component (repeatable, "
+                         "e.g. --component fused_campaign); the committed "
+                         "baseline still requires a full run")
+    ap.add_argument("--repeat", type=int, default=None, metavar="N",
+                    help="bench only: best-of window per timed side "
+                         "(default: each component's own)")
     args = ap.parse_args()
     if args.workers is not None:
         os.environ["REPRO_WORKERS"] = str(args.workers)
@@ -69,10 +83,23 @@ def main() -> None:
         ap.error(f"unknown benchmarks {unknown}; known: {list(all_benches)}")
     if args.json and not (set(names) & json_capable):
         ap.error(f"--json requires one of {sorted(json_capable)} in names")
+    if (args.component or args.repeat is not None) \
+            and "bench" not in names:
+        ap.error("--component/--repeat only apply to bench")
+    if args.component:
+        unknown = sorted(set(args.component)
+                         - set(bench_simulate.ALL_COMPONENTS))
+        if unknown:
+            ap.error(f"unknown bench components {unknown}; known: "
+                     f"{list(bench_simulate.ALL_COMPONENTS)}")
     for name in names:
         t0 = time.perf_counter()
         print(f"\n================ {name} ================", flush=True)
-        if name in json_capable:
+        if name == "bench":
+            all_benches[name](json_out=args.json,
+                              components=args.component,
+                              repeat=args.repeat)
+        elif name in json_capable:
             all_benches[name](json_out=args.json)
         else:
             all_benches[name]()

@@ -5,7 +5,7 @@ the registry is the single place a new rule module plugs in.
 """
 from __future__ import annotations
 
-from . import f64, ordering, pickle_safety, protocol, rng
+from . import device_sync, f64, ordering, pickle_safety, protocol, rng
 
 ALL_RULES = (
     rng.ModuleLevelDraw,
@@ -13,6 +13,7 @@ ALL_RULES = (
     rng.DrawInSetIteration,
     pickle_safety.DeviceCacheNotDropped,
     pickle_safety.StateDeviceAttr,
+    device_sync.DeviceSyncInLoop,
     f64.ParallelScanOnDevice,
     f64.ReductionWithoutDtype,
     f64.Float32Literal,

@@ -240,6 +240,11 @@ class TuningRun:
     meta: MetaTuningResult | None = None           # meta
     cache: CacheFile | None = None                 # record
     cache_path: str | None = None                  # record
+    # how the campaign grid was driven: "device" (fused on the jax
+    # engine), "host" (interleaved ask/tell), "sequential", or "mixed"
+    # (differed per space). Informational — scores are bit-identical
+    # across modes. None for modes without a drive (record).
+    fuse: str | None = None
 
     @property
     def speedup(self) -> float | None:
@@ -350,7 +355,8 @@ class Tuner:
                          score=report.score, report=report,
                          n_evaluated=1,
                          wall_seconds=report.wall_seconds,
-                         simulated_seconds=report.simulated_seconds)
+                         simulated_seconds=report.simulated_seconds,
+                         fuse=report.fuse)
 
     def hypertune(self, strategy: str,
                   journal: str | CampaignJournal | None = None) -> TuningRun:
@@ -370,7 +376,7 @@ class Tuner:
                          n_evaluated=len(res.results),
                          wall_seconds=res.wall_seconds,
                          simulated_seconds=res.simulated_seconds,
-                         hypertuning=res)
+                         hypertuning=res, fuse=best.report.fuse)
 
     def meta(self, strategy: str, meta_strategy: str = "simulated_annealing",
              extended: bool = True, max_hp_evals: int = 50,
@@ -392,7 +398,7 @@ class Tuner:
                          n_evaluated=len(res.evaluated),
                          wall_seconds=res.wall_seconds,  # resume-cumulative
                          simulated_seconds=res.simulated_seconds,
-                         meta=res)
+                         meta=res, fuse=res.fuse)
 
     def record(self, kernel: str, runner: str = "live",
                device: str = "cpu_interpret",

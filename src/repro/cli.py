@@ -153,7 +153,7 @@ def cmd_simulate(args) -> int:
           f"[{args.strategy} x{args.repeats} repeats, "
           f"{len(report.per_space_score)} spaces]")
     print(f"simulated {run.simulated_seconds/3600:.2f} h of tuning in "
-          f"{report.wall_seconds:.1f} s wall")
+          f"{report.wall_seconds:.1f} s wall (drive: {run.fuse})")
     return 0
 
 
@@ -169,7 +169,8 @@ def cmd_hypertune(args) -> int:
           f" ({100*rel:+.1f}%; paper Sec. IV-B reports +94.8% on average)")
     print(f"campaign: {run.n_evaluated} configs, "
           f"{run.simulated_seconds/3600:.2f} simulated h replayed in "
-          f"{run.wall_seconds:.1f} s wall ({args.workers} workers)")
+          f"{run.wall_seconds:.1f} s wall ({args.workers} workers, "
+          f"drive: {run.fuse})")
     if args.journal:
         print(f"journal: {args.journal}")
     return 0
@@ -189,7 +190,8 @@ def cmd_meta(args) -> int:
     print(f"best hyperparameters for {args.strategy} "
           f"(found by {args.meta_strategy}): {run.best_hyperparams}")
     print(f"score {run.score:+.4f} after {run.n_evaluated} of "
-          f"{grid.size} grid points ({run.wall_seconds:.1f} s wall)")
+          f"{grid.size} grid points ({run.wall_seconds:.1f} s wall"
+          + (f", drive: {run.fuse}" if run.fuse else "") + ")")
     if run.speedup:
         print(f"simulated {run.simulated_seconds/3600:.2f} h of tuning "
               f"replayed in {run.wall_seconds:.1f} s wall "
@@ -226,6 +228,8 @@ def cmd_report(args) -> int:
         rel = (best.score - avg.score) / max(abs(avg.score), 1e-2)
         print(f"optimal vs average config: {best.score:+.4f} vs "
               f"{avg.score:+.4f} ({100*rel:+.1f}%)")
+        modes = {r.report.fuse for r in results.values()}
+        print(f"drive: {modes.pop() if len(modes) == 1 else 'mixed'}")
         work = sum(r.report.wall_seconds for r in results.values())
     else:
         ranked = sorted(records, key=lambda r: -r["score"])[:args.top]

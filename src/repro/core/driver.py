@@ -62,6 +62,29 @@ class ProtocolDeprecationWarning(DeprecationWarning):
     adapted through the thread bridge instead of speaking ask/tell."""
 
 
+class FuseFallbackNotice(UserWarning):
+    """A fused drive (device or host) fell back to a slower mode for some
+    strategy. Informational, not an error: the fallback is bit-identical,
+    only slower — but campaigns that silently degrade from the device path
+    to sequential stepping cost orders of magnitude more wall time, so the
+    reason is surfaced once per (strategy, reason) instead of never."""
+
+
+_fuse_noticed: set = set()
+
+
+def warn_fuse_fallback(strategy_name: str, reason: str, mode: str) -> None:
+    """One-time (per process, per (strategy, reason)) notice that a fused
+    drive degraded to ``mode`` (``"host"`` or ``"sequential"``)."""
+    key = (strategy_name, reason)
+    if key in _fuse_noticed:
+        return
+    _fuse_noticed.add(key)
+    warnings.warn(
+        f"{strategy_name}: fused drive falling back to {mode} stepping "
+        f"({reason})", FuseFallbackNotice, stacklevel=3)
+
+
 # --------------------------------------------------------------------- state
 class SearchState:
     """Explicit per-run strategy state (the object ``ask``/``tell`` act on).
@@ -359,6 +382,9 @@ class SearchDriver:
         self.state = state
         state.attach_runner(runner)
         self.exhausted = False
+        # how this run's evaluations were driven: "sequential" (own
+        # step()/run() loop) until a drive_many sets "host" or "device"
+        self.fuse = "sequential"
 
     def step(self) -> bool:
         """One ask/evaluate/tell round; False when the run is over.
@@ -415,7 +441,8 @@ class SearchDriver:
 
 # ---------------------------------------------------------------- drive_many
 def drive_many(drivers: Sequence[SearchDriver],
-               engine: "str | None" = None) -> list[Observation | None]:
+               engine: "str | None" = None,
+               fuse: "str | None" = None) -> list[Observation | None]:
     """Interleave N tuning runs, fusing concurrent asks into shared batch
     resolutions (``runner.run_fused``) against the columnar engine.
 
@@ -430,7 +457,21 @@ def drive_many(drivers: Sequence[SearchDriver],
     ``SimulationRunner`` for the drive (``"numpy"``/``"scalar"``/``"jax"``
     — see ``SimulationRunner``); observable per-run state is engine-
     independent because the jax replay path is bit-identical to numpy.
+
+    ``fuse`` selects the drive mechanism: ``"host"`` (default) is the
+    per-round interleave above; ``"device"`` routes eligible runs — array-
+    native strategies on jax-backed ``SimulationRunner``s — through the
+    device-resident campaign executor (``engine_jax.campaign``: whole runs
+    per vmapped dispatch, bit-identical committed state) and drives the
+    rest on the host after a one-time ``FuseFallbackNotice`` naming the
+    strategy and reason. The chosen mode is recorded per driver as
+    ``driver.fuse``.
     """
+    if fuse not in (None, "host", "device"):
+        raise ValueError(f"unknown fuse mode {fuse!r}; "
+                         f"expected 'host' or 'device'")
+    if engine is None and fuse == "device":
+        engine = "jax"  # the device path is jax-backed by definition
     if engine is not None:
         from .runner import SimulationRunner
         if engine == "vectorized":
@@ -443,7 +484,29 @@ def drive_many(drivers: Sequence[SearchDriver],
             if isinstance(r, SimulationRunner):
                 r.engine = engine
                 r.columnar = engine != "scalar"
-    active = [d for d in drivers if not d.state.finished]
+    host_drivers: Sequence[SearchDriver] = drivers
+    if fuse == "device":
+        from . import engine_jax
+        fused: list[SearchDriver] = []
+        host_drivers = []
+        for d in drivers:
+            reason = (engine_jax.fuse_reason(d)
+                      if engine_jax.engine_available() else
+                      "jax engine unavailable "
+                      f"({engine_jax.unavailable_reason()})")
+            if reason is None:
+                d.fuse = "device"
+                fused.append(d)
+            else:
+                warn_fuse_fallback(
+                    getattr(d.strategy, "name", type(d.strategy).__name__),
+                    reason, "host")
+                host_drivers.append(d)
+        if fused:
+            engine_jax.drive_fused(fused)
+    for d in host_drivers:
+        d.fuse = "host"
+    active = [d for d in host_drivers if not d.state.finished]
     try:
         while active:
             batch: list[tuple[SearchDriver, list]] = []
@@ -468,6 +531,6 @@ def drive_many(drivers: Sequence[SearchDriver],
                     survivors.append(d)
             active = survivors
     finally:
-        for d in drivers:
+        for d in host_drivers:
             d.state.close()
     return [d.runner.best for d in drivers]

@@ -82,6 +82,8 @@ def require_jax() -> None:
 
 
 if HAVE_JAX:
+    from .campaign import FUSED_STRATEGIES, FusedRun  # noqa: F401
+    from .campaign import drive_fused, fuse_reason  # noqa: F401
     from .replay import ReplayEngine, replay_many  # noqa: F401
     from .strategies import FREE_RUN_STRATEGIES, free_run  # noqa: F401
     from .tables import ReplayTables, SpaceTables  # noqa: F401

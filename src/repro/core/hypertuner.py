@@ -208,6 +208,9 @@ class MetaTuningResult:
     trace: list                    # FunctionRunner trace (simulated time axis)
     wall_seconds: float
     simulated_seconds: float = 0.0  # what live tuning would have cost
+    # drive mode of the inner campaigns ("device"/"host"/"sequential"/
+    # "mixed"); None when every evaluation was journal-memoized
+    fuse: str | None = None
 
 
 def meta_hypertune(strategy_name: str, meta_strategy_name: str,
@@ -262,6 +265,7 @@ def meta_hypertune(strategy_name: str, meta_strategy_name: str,
                      + (" (with mid-run state snapshot)"
                         if snapshot_b64 else ""))
     t0 = time.perf_counter()
+    fuse_modes: set = set()
 
     def objective(cfg: Config) -> tuple:
         hp = space.as_dict(cfg)
@@ -272,6 +276,7 @@ def meta_hypertune(strategy_name: str, meta_strategy_name: str,
             report = score_hyperconfig(strategy_name, hp, scorers, repeats,
                                        seed, executor=executor)
             score, simulated = report.score, report.simulated_seconds
+            fuse_modes.add(report.fuse)
             memo[hp_id] = (score, simulated)
             if journal is not None:
                 journal.append({"hp_id": hp_id, "hyperparams": hp,
@@ -319,7 +324,9 @@ def meta_hypertune(strategy_name: str, meta_strategy_name: str,
         strategy_name, meta_strategy_name,
         space.as_dict(best.config), -best.value, evaluated,
         list(runner.trace), prior_wall + time.perf_counter() - t0,
-        simulated_seconds=runner.budget.spent_seconds)
+        simulated_seconds=runner.budget.spent_seconds,
+        fuse=(fuse_modes.pop() if len(fuse_modes) == 1
+              else "mixed" if fuse_modes else None))
 
 
 # ------------------------------------------------- meta-level methodology

@@ -112,9 +112,6 @@ class SpaceScorer:
         """
         if self.engine == "scalar":
             return self._score_trace_scalar(trace, times, baseline)
-        if baseline is None:
-            baseline = self.baseline_at_time(times)
-        out = np.zeros(len(times))
         # improvement extraction stays a single sequential pass (a handful
         # of appends; vectorizing it would re-read every trace tuple into
         # arrays and lose on long traces) — the per-sample loop is what
@@ -126,10 +123,23 @@ class SpaceScorer:
                 best = value
                 ts_list.append(t_cum)
                 bs_list.append(best)
-        if not ts_list:
+        return self.score_improvements(
+            np.asarray(ts_list, dtype=np.float64),
+            np.asarray(bs_list, dtype=np.float64), times, baseline)
+
+    def score_improvements(self, ts: np.ndarray, bs: np.ndarray,
+                           times: np.ndarray,
+                           baseline: np.ndarray | None = None) -> np.ndarray:
+        """``score_trace`` for a run already reduced to its improvement
+        step function ``(ts, bs)`` — the form the device-fused campaign
+        path hands over (``FusedRun.improvements``), skipping the Python
+        trace entirely. Same float64 arithmetic per sample as
+        ``score_trace``; the two agree bit-for-bit on every trace."""
+        if baseline is None:
+            baseline = self.baseline_at_time(times)
+        out = np.zeros(len(times))
+        if not len(ts):
             return out
-        ts = np.asarray(ts_list, dtype=np.float64)
-        bs = np.asarray(bs_list, dtype=np.float64)
         k = np.searchsorted(ts, times, side="right") - 1
         bk = bs[np.maximum(k, 0)]
         sb = np.asarray(baseline, dtype=np.float64)
@@ -313,6 +323,11 @@ class AggregateReport:
     fresh_evals: int = 0
     wall_seconds: float = 0.0
     simulated_seconds: float = 0.0
+    # how the in-process grid executed: "device" (engine_jax fused
+    # campaigns), "host" (interleaved drive_many), "sequential" (one cell
+    # at a time), or "mixed" when spaces took different paths. Purely
+    # informational — scores are bit-identical across all of them.
+    fuse: str = "sequential"
 
 
 @dataclasses.dataclass
@@ -357,7 +372,8 @@ def _repeat_rng(scorer: SpaceScorer, repeat: int, seed: int) -> random.Random:
 def run_repeats_fused(scorer: SpaceScorer,
                       make_strategy: Callable[[], Strategy],
                       repeats: int, seed: int, times: np.ndarray,
-                      baseline: np.ndarray) -> list[RepeatResult]:
+                      baseline: np.ndarray
+                      ) -> tuple[list[RepeatResult], str]:
     """All of one space's repeats as concurrent, ask-fused tuning runs.
 
     Builds one ``SearchDriver`` per repeat (same per-cell RNG seeding as
@@ -368,8 +384,13 @@ def run_repeats_fused(scorer: SpaceScorer,
     sequential loop; only wall time changes. Per-cell ``wall_seconds`` is
     an even share of the fused wall (runs overlap, so a per-runner clock
     would multiple-count).
+
+    Returns ``(cells, mode)`` where ``mode`` is ``"host"``, or
+    ``"sequential"`` when the strategy cannot be driven ask/tell-wise —
+    announced once per (strategy, reason) with a ``FuseFallbackNotice``.
     """
-    from .driver import SearchDriver, ThreadBridgeState, drive_many
+    from .driver import (SearchDriver, ThreadBridgeState, drive_many,
+                         warn_fuse_fallback)
     t0 = time.perf_counter()
     drivers = []
     for r in range(repeats):
@@ -377,8 +398,13 @@ def run_repeats_fused(scorer: SpaceScorer,
         if not hasattr(strategy, "init_state"):
             # duck-typed strategy exposing only run(space, runner, rng):
             # no ask/tell to fuse — drive the cells sequentially
+            warn_fuse_fallback(
+                getattr(strategy, "name", type(strategy).__name__),
+                "duck-typed strategy exposes only run(space, runner, rng); "
+                "no ask/tell protocol to fuse", "sequential")
             return [run_repeat(scorer, make_strategy, rr, seed, times,
-                               baseline) for rr in range(repeats)]
+                               baseline) for rr in range(repeats)], \
+                "sequential"
         runner = SimulationRunner(scorer.cache,
                                   Budget(max_seconds=scorer.budget_s),
                                   engine=scorer.engine)
@@ -390,15 +416,76 @@ def run_repeats_fused(scorer: SpaceScorer,
             # their direct legacy dispatch in Strategy.run is bit-identical
             # and much faster, so those cells run sequentially
             driver.state.close()
+            warn_fuse_fallback(
+                getattr(strategy, "name", type(strategy).__name__),
+                "thread-bridged legacy loop pays a thread rendezvous per "
+                "evaluation when driven ask/tell-wise", "sequential")
             return [run_repeat(scorer, make_strategy, rr, seed, times,
-                               baseline) for rr in range(repeats)]
+                               baseline) for rr in range(repeats)], \
+                "sequential"
         drivers.append(driver)
     drive_many(drivers)
     wall_share = (time.perf_counter() - t0) / max(1, repeats)
     return [RepeatResult(scorer.score_trace(d.runner.trace, times, baseline),
                          d.runner.fresh_evals, wall_share,
                          d.runner.budget.spent_seconds)
-            for d in drivers]
+            for d in drivers], "host"
+
+
+def run_repeats_device(scorer: SpaceScorer,
+                       make_strategy: Callable[[], Strategy],
+                       repeats: int, seed: int, times: np.ndarray,
+                       baseline: np.ndarray
+                       ) -> "list[RepeatResult] | None":
+    """All of one space's repeats as one device-resident fused campaign
+    (``engine_jax.campaign``): the strategies' ask/tell trajectories step
+    on the host against a value table while every run's budget-replay-
+    commit resolves in a handful of vmapped device dispatches. Curves and
+    scores are bit-identical to the sequential/host paths (the trajectory
+    is budget-independent; see the campaign module docstring).
+
+    Returns ``None`` — after a one-time ``FuseFallbackNotice`` — when the
+    grid is not device-fusable (strategy outside the array-native
+    allowlist, no jax backend, empty cache); the caller then takes the
+    host drive.
+    """
+    from . import engine_jax
+    from .driver import SearchDriver, warn_fuse_fallback
+    probe = make_strategy()
+    name = getattr(probe, "name", type(probe).__name__)
+    if not engine_jax.engine_available():
+        warn_fuse_fallback(
+            name, "jax engine unavailable "
+            f"({engine_jax.unavailable_reason()})", "host")
+        return None
+    if name not in engine_jax.FUSED_STRATEGIES:
+        warn_fuse_fallback(
+            name, f"strategy {name!r} is not array-native "
+            "(trajectory not host-replayable from values alone)", "host")
+        return None
+    t0 = time.perf_counter()
+    drivers = []
+    for r in range(repeats):
+        runner = SimulationRunner(scorer.cache,
+                                  Budget(max_seconds=scorer.budget_s),
+                                  engine="jax")
+        drivers.append(SearchDriver(make_strategy(), scorer.cache.space,
+                                    runner, _repeat_rng(scorer, r, seed)))
+    reason = engine_jax.fuse_reason(drivers[0])
+    if reason is not None:
+        for d in drivers:
+            d.state.close()
+        warn_fuse_fallback(name, reason, "host")
+        return None
+    runs = engine_jax.drive_fused(drivers, materialize=False)
+    wall_share = (time.perf_counter() - t0) / max(1, repeats)
+    # scores straight from the committed improvement arrays: no Python
+    # trace materializes on the scores-only path (score_improvements is
+    # bit-identical to score_trace on the equivalent trace)
+    return [RepeatResult(scorer.score_improvements(*run.improvements(),
+                                                   times, baseline),
+                         run.fresh_evals, wall_share, run.spent)
+            for run in runs]
 
 
 def _repeat_cell(ctx: tuple, si: int, r: int) -> RepeatResult:
@@ -423,14 +510,18 @@ def evaluate_strategy(make_strategy: Callable[[], Strategy],
     (space × repeat) grid is fanned out and reduced in fixed space-major
     order, so the aggregate is bit-identical to the serial loop.
 
-    ``drive`` selects how the in-process grid executes: ``"fused"`` drives
-    each space's repeats as interleaved ask/tell runs with cross-run batch
-    fusion (``run_repeats_fused``), ``"sequential"`` runs one cell at a
-    time (``run_repeat``), and ``"auto"`` (default) fuses whenever the
-    grid runs in-process on vectorized scorers. Scores are bit-identical
-    across all three — fusion only changes wall time.
+    ``drive`` selects how the in-process grid executes: ``"device"``
+    drives each space's repeats as one device-resident fused campaign
+    (``run_repeats_device``; falls back with a ``FuseFallbackNotice`` when
+    ineligible), ``"fused"`` drives them as interleaved host ask/tell runs
+    with cross-run batch fusion (``run_repeats_fused``), ``"sequential"``
+    runs one cell at a time (``run_repeat``), and ``"auto"`` (default)
+    fuses in-process grids on the host — on the device when the scorer's
+    engine is ``"jax"``. Scores are bit-identical across all of them —
+    the drive only changes wall time; the chosen mode is surfaced as
+    ``AggregateReport.fuse``.
     """
-    if drive not in ("auto", "fused", "sequential"):
+    if drive not in ("auto", "device", "fused", "sequential"):
         raise ValueError(f"unknown drive mode {drive!r}")
     names = [s.name for s in scorers]
     if len(set(names)) != len(names):
@@ -439,6 +530,7 @@ def evaluate_strategy(make_strategy: Callable[[], Strategy],
     baselines = [s.baseline_at_time(t) for s, t in zip(scorers, times)]
     cells_idx = [(si, r) for si in range(len(scorers)) for r in range(repeats)]
     cells: list[RepeatResult | None] = [None] * len(cells_idx)
+    modes: list[str] = []
     if executor is not None and executor.parallel:
         ctx = (tuple(scorers), make_strategy, seed, times, baselines)
         # chunk the (space × repeat) grid: vectorized cells are cheap, so
@@ -450,17 +542,28 @@ def evaluate_strategy(make_strategy: Callable[[], Strategy],
         for i, res in executor.map(_repeat_cell, cells_idx, shared=ctx,
                                    chunksize=chunksize):
             cells[i] = res
+        modes.append("sequential")
     else:
         for si, scorer in enumerate(scorers):
-            if drive != "sequential" and scorer.engine != "scalar":
-                cells[si * repeats:(si + 1) * repeats] = run_repeats_fused(
+            res: "list[RepeatResult] | None" = None
+            mode = "sequential"
+            if scorer.engine != "scalar" and (
+                    drive == "device"
+                    or (drive == "auto" and scorer.engine == "jax")):
+                res = run_repeats_device(scorer, make_strategy, repeats,
+                                         seed, times[si], baselines[si])
+                mode = "device"
+            if res is None and drive != "sequential" \
+                    and scorer.engine != "scalar":
+                res, mode = run_repeats_fused(
                     scorer, make_strategy, repeats, seed, times[si],
                     baselines[si])
-            else:
-                for r in range(repeats):
-                    cells[si * repeats + r] = run_repeat(
-                        scorer, make_strategy, r, seed, times[si],
-                        baselines[si])
+            if res is None:
+                res = [run_repeat(scorer, make_strategy, r, seed, times[si],
+                                  baselines[si]) for r in range(repeats)]
+                mode = "sequential"
+            cells[si * repeats:(si + 1) * repeats] = res
+            modes.append(mode)
     per_space: dict[str, np.ndarray] = {}
     per_space_score: dict[str, float] = {}
     fresh = 0
@@ -478,5 +581,6 @@ def evaluate_strategy(make_strategy: Callable[[], Strategy],
         per_space[scorer.name] = curve
         per_space_score[scorer.name] = float(curve.mean())
     mean_curve = np.mean(np.stack(list(per_space.values())), axis=0)
+    fuse = modes[0] if len(set(modes)) == 1 else "mixed"
     return AggregateReport(float(mean_curve.mean()), mean_curve, per_space,
-                           per_space_score, fresh, wall, simulated)
+                           per_space_score, fresh, wall, simulated, fuse)

@@ -356,6 +356,7 @@ def report_to_json(report: AggregateReport) -> dict:
         "fresh_evals": report.fresh_evals,
         "wall_seconds": report.wall_seconds,
         "simulated_seconds": report.simulated_seconds,
+        "fuse": report.fuse,
     }
 
 
@@ -369,6 +370,9 @@ def report_from_json(d: Mapping) -> AggregateReport:
         fresh_evals=int(d.get("fresh_evals", 0)),
         wall_seconds=float(d.get("wall_seconds", 0.0)),
         simulated_seconds=float(d.get("simulated_seconds", 0.0)),
+        # pre-fused journals carry no drive mode: "sequential" matches how
+        # those campaigns actually ran
+        fuse=str(d.get("fuse", "sequential")),
     )
 
 

@@ -76,3 +76,22 @@ def test_paper_strategy_registry():
     for name in PAPER_STRATEGIES:
         cls = STRATEGIES[name]
         assert cls.HYPERPARAM_SPACE, f"{name} must expose Table III values"
+
+
+@pytest.mark.parametrize("n", [0, 1, 2, 3, 5, 8, 17, 100, 512, 1023, 1024,
+                               1025, 4096])
+@pytest.mark.parametrize("seed", [0, 1, 42])
+def test_rng_permutation_matches_shuffle_stream(n, seed):
+    """``_rng_permutation`` is a drop-in for ``rng.shuffle(range(n))``:
+    same permutation AND same consumed getrandbits stream, so seeded runs
+    recorded before the fast path still replay bit-for-bit — including
+    every subsequent draw from the same rng."""
+    from repro.core.strategies.random_search import _rng_permutation
+    a, b = random.Random(seed), random.Random(seed)
+    ref = list(range(n))
+    a.shuffle(ref)
+    assert _rng_permutation(n, b) == ref
+    # the rejection-sampling draws consumed are identical too: the two
+    # generators stay in lockstep afterwards
+    assert [a.getrandbits(64) for _ in range(4)] \
+        == [b.getrandbits(64) for _ in range(4)]
